@@ -1,0 +1,81 @@
+"""The paper's technique on OUR framework: selective wall-clock autotuning
+of LM step-function configurations (reduced archs, real CPU timing).
+
+For each policy x tolerance: exhaustively benchmark the StepKnobs space
+with SelectiveTimer; report autotuning speedup (vs full re-timing), mean
+prediction error vs a directly-prior full execution, and whether the chosen
+configuration matches the full-execution optimum.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.policies import policy
+from repro.tune import LMStudy, SelectiveTimer, lm_config_space
+
+from .common import fmt_table, save_rows
+
+
+def run_arch(arch: str, *, policies=("conditional", "local", "eager"),
+             eps=(0.5, 0.25, 0.1), iters=3, max_configs=8, seed=0):
+    study = LMStudy(arch, batch=2, seq=32, seed=seed)
+    space = lm_config_space(study.cfg)[:max_configs]
+    rows = []
+    for pol in policies:
+        for e in eps:
+            timer = SelectiveTimer(policy(pol, tolerance=e, min_samples=3))
+            full_time = 0.0
+            sel_time = 0.0
+            preds, fulls = [], []
+            for kn in space:
+                if not timer.policy.persistent_models:
+                    timer.reset_models()
+                pred, full, cost = study.run_config(kn, timer, iters=iters)
+                preds.append(pred)
+                fulls.append(full)
+                full_time += full * iters
+                sel_time += cost
+            errs = [abs(p - f) / f for p, f in zip(preds, fulls)]
+            best_pred = int(np.argmin(preds))
+            best_full = int(np.argmin(fulls))
+            rows.append({
+                "arch": arch, "policy": pol, "tolerance": e,
+                "speedup": full_time / max(sel_time, 1e-12),
+                "mean_error": float(np.mean(errs)),
+                "optimum_match": space[best_pred].name
+                == space[best_full].name,
+                "chosen": space[best_pred].name,
+            })
+    return rows
+
+
+def run(fast=True, archs=None):
+    archs = archs or (["smollm-135m"] if fast
+                      else ["smollm-135m", "phi3.5-moe-42b-a6.6b",
+                            "xlstm-125m"])
+    all_rows = []
+    for arch in archs:
+        rows = run_arch(arch, eps=(0.5, 0.1) if fast else (0.5, 0.25, 0.1))
+        all_rows.extend(rows)
+        print(f"\n== LM autotune: {arch} (reduced, measured) ==")
+        print(fmt_table(rows, ("policy", "tolerance", "speedup",
+                               "mean_error", "optimum_match", "chosen")))
+    save_rows("lm_autotune", all_rows)
+    return all_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--archs", nargs="*", default=None)
+    args = ap.parse_args()
+    run(fast=not args.full, archs=args.archs)
+
+
+if __name__ == "__main__":
+    main()

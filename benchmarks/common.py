@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: epsilon sweeps, tables, JSON dumps."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+from repro.core.policies import POLICIES, policy
+from repro.core.tuner import Autotuner, Study
+
+ART = os.path.join(os.path.dirname(__file__), "results")
+
+EPS_FULL = (1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125)
+EPS_FAST = (1.0, 0.25, 0.0625)
+
+
+def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
+                eps: Sequence[float] = EPS_FAST, trials: int = 3,
+                seeds: Sequence[int] = (0,), allocations=(0,),
+                scale: str = "ci") -> List[dict]:
+    """The paper's measurement protocol (§VI.A): for each policy x epsilon
+    (x allocation), run the full exhaustive autotune and record speedup,
+    mean prediction error, optimum quality."""
+    rows = []
+    for pol in policies:
+        for e in eps:
+            for seed in seeds:
+                for alloc in allocations:
+                    study = make_study(scale)
+                    tuner = Autotuner(study, policy(pol, tolerance=e),
+                                      trials=trials, seed=seed,
+                                      allocation=alloc)
+                    t0 = time.time()
+                    rep = tuner.tune()
+                    row = rep.row()
+                    row.update(seed=seed, allocation=alloc,
+                               bench_wall_s=round(time.time() - t0, 1))
+                    rows.append(row)
+    return rows
+
+
+def fmt_table(rows: List[dict], cols: Sequence[str], *,
+              floatfmt: str = "{:.3g}") -> str:
+    widths = {c: max(len(c), *(len(_fmt(r.get(c), floatfmt))
+                               for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-|-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(_fmt(r.get(c), floatfmt).ljust(widths[c]) for c in cols)
+        for r in rows)
+    return f"{head}\n{sep}\n{body}"
+
+
+def _fmt(v, floatfmt):
+    if isinstance(v, float):
+        return floatfmt.format(v)
+    return str(v)
+
+
+def save_rows(name: str, rows: List[dict]):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, name + ".json"), "w") as f:
+        json.dump(rows, f, indent=1)

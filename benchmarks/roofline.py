@@ -1,0 +1,70 @@
+"""§Roofline: the per-(arch x shape x mesh) three-term table, from the
+dry-run artifacts in benchmarks/artifacts/.
+
+    python -m benchmarks.roofline [--mesh single|multi|both] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "bound", "step_s", "mfu_frac", "useful", "live_GiB", "fits")
+
+
+def load_rows(mesh="both", suffix=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*{suffix}.json"))):
+        r = json.load(open(path))
+        tagmesh = "multi" if len(r["mesh"]) == 3 else "single"
+        if mesh != "both" and tagmesh != mesh:
+            continue
+        t = r["roofline"]
+        n = r["chips"]
+        # roofline fraction: useful model flops vs what the machine could do
+        # in the step's roofline-limited time
+        mfu = (r["model_flops_global"]
+               / (n * 197e12 * max(t["step_s"], 1e-12)))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": tagmesh,
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"], "bound": t["bound"],
+            "step_s": t["step_s"], "mfu_frac": mfu,
+            "useful": r["useful_flops_ratio"],
+            "live_GiB": r["memory"].get("live_tpu_est_bytes", 0) / 2**30,
+            "fits": r["memory"].get("fits_16g"),
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh, args.suffix)
+    from .common import fmt_table
+    print(fmt_table(rows, COLS))
+    by_bound = {}
+    for r in rows:
+        by_bound[r["bound"]] = by_bound.get(r["bound"], 0) + 1
+    print(f"\n{len(rows)} cells; bound histogram: {by_bound}")
+    worst = sorted(rows, key=lambda r: r["mfu_frac"])[:3]
+    print("worst roofline fraction:",
+          [(r['arch'], r['shape'], r['mesh'], round(r['mfu_frac'], 4))
+           for r in worst])
+    coll = sorted(rows, key=lambda r: -r["collective_s"])[:3]
+    print("most collective-bound:",
+          [(r['arch'], r['shape'], r['mesh'],
+            round(r['collective_s'], 3)) for r in coll])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

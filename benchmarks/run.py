@@ -1,0 +1,48 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+Sections:
+  1. paper case studies (Figs 4-5 protocol, CI scale)
+  2. beyond-paper: racing + extrapolation
+  3. LM autotune (the technique on our framework, measured)
+  4. roofline table from the dry-run artifacts (if present)
+
+``--full`` widens epsilon sweeps and architectures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sections", nargs="*",
+                    default=["case", "beyond", "lm", "roofline"])
+    args = ap.parse_args(argv)
+    fast = not args.full
+    t0 = time.time()
+
+    if "case" in args.sections:
+        from . import bench_case_studies
+        bench_case_studies.run(fast=fast)
+    if "beyond" in args.sections:
+        from . import bench_beyond_paper
+        bench_beyond_paper.run(fast=fast)
+    if "lm" in args.sections:
+        from . import bench_lm_autotune
+        bench_lm_autotune.run(fast=fast)
+    if "roofline" in args.sections:
+        try:
+            from . import roofline
+            sys.argv = ["roofline"]
+            roofline.main()
+        except Exception as e:
+            print(f"[roofline] skipped: {e}")
+    print(f"\nbenchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Serve a reduced LM with the slot-based continuous-batching engine.
+
+    PYTHONPATH=src python examples/serve_lm.py [arch]
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "smollm-135m"
+    serve_main(["--arch", arch, "--reduced", "--requests", "12",
+                "--batch", "4", "--max-new", "16", "--temperature", "0.8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,482 @@
+"""Critter: the paper's online selective-execution profiler.
+
+This module implements the interception protocol of Figure 2 — the logic the
+real tool runs inside PMPI wrappers — as methods invoked by the simmpi
+runtime at each kernel event:
+
+- ``on_comp``  — local computation kernel (BLAS/LAPACK interception);
+- ``on_coll``  — blocking collective (MPI_Bcast et al. interception):
+  internal allreduce of (exec_time, execute-vote, keys, freqs), max-path
+  winner adoption, selective execution, ``update_statistics`` and — for
+  eager propagation — ``aggregate_statistics`` across the channel;
+- ``on_p2p``   — blocking Send/Recv (MPI_Recv interception: internal
+  PMPI_Sendrecv, max of the two paths, OR of execute votes);
+- ``on_isend_post`` / ``on_isend_match`` — nonblocking p2p (MPI_Isend /
+  MPI_Wait interception: decision made from sender-local state, statistics
+  updated at completion).
+
+The five selective-execution policies of §IV.B are parameterized by
+``core.policies.Policy``; the aggregate-channel closure used by eager
+propagation lives in ``core.channels``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .channels import ChannelRegistry
+from .models import Extrapolator
+from .pathset import RankState
+from .policies import Policy
+from .signatures import Signature
+from .stats import KernelStats
+
+
+class IterationReport:
+    """Everything the tuner wants to know about one configuration run."""
+
+    __slots__ = ("predicted_time", "wall_time", "crit_comp", "crit_comm",
+                 "measured_time", "max_measured_comp", "executed", "skipped",
+                 "events")
+
+    def __init__(self, predicted_time, wall_time, crit_comp, crit_comm,
+                 measured_time, max_measured_comp, executed, skipped, events):
+        self.predicted_time = predicted_time
+        self.wall_time = wall_time
+        self.crit_comp = crit_comp
+        self.crit_comm = crit_comm
+        self.measured_time = measured_time
+        self.max_measured_comp = max_measured_comp
+        self.executed = executed
+        self.skipped = skipped
+        self.events = events
+
+    def __repr__(self):
+        return (f"IterationReport(pred={self.predicted_time:.4g}s, "
+                f"wall={self.wall_time:.4g}s, exec={self.executed}, "
+                f"skip={self.skipped})")
+
+
+class Critter:
+    """Shared profiler state across tuning iterations.
+
+    One instance per (policy, study); owns the per-rank Critter state, the
+    channel registry (via the World), the eager global switch-off set, and
+    the a-priori critical-path count snapshots.
+    """
+
+    def __init__(self, world, policy: Policy):
+        self.world = world
+        self.registry: ChannelRegistry = world.registry
+        self.policy = policy
+        self.ranks: List[RankState] = [RankState(r) for r in range(world.size)]
+        # eager propagation: signatures switched off machine-wide, and the
+        # globally-agreed statistics used to predict them
+        self.global_off: set = set()
+        self.global_stats: Dict[Signature, KernelStats] = {}
+        # apriori: frozen critical-path execution counts from the offline pass
+        self.apriori_counts: Optional[List[Dict[Signature, int]]] = None
+        # beyond-paper: per-op-family input-size extrapolation (§VIII);
+        # fitted from the pooled kernel statistics at iteration start
+        self.extrapolator: Optional[Extrapolator] = \
+            Extrapolator(max_rel_err=policy.tolerance) \
+            if policy.extrapolate else None
+        # runtime-facing mode flags (set per run by the tuner/runtime)
+        self.force_execute = False
+        self.update_stats = True
+
+    # ------------------------------------------------------------------ state
+
+    def begin_iteration(self, *, force_execute=False, update_stats=True):
+        for st in self.ranks:
+            st.reset_iteration()
+        self.force_execute = force_execute
+        self.update_stats = update_stats
+        if self.extrapolator is not None:
+            pooled: Dict[Signature, KernelStats] = {}
+            for st in self.ranks:
+                for sig, stats in st.kbar.items():
+                    if sig not in pooled:
+                        pooled[sig] = stats
+            # family models PERSIST across configurations (unlike the
+            # per-signature statistics, which the paper's protocol resets):
+            # a model fitted on one configuration's kernel sizes predicts
+            # another configuration's different sizes — the cross-config
+            # generalization per-signature modeling cannot provide
+            if pooled:
+                self.extrapolator.refit(pooled)
+
+    def snapshot_apriori_counts(self):
+        """Freeze the current per-rank critical-path counts (after a full
+        offline pass) for immediate use by the 'apriori' policy."""
+        self.apriori_counts = [
+            {sig: info.freq for sig, info in st.ktilde.items() if info.freq}
+            for st in self.ranks]
+
+    def reset_models(self):
+        """Paper §VI.A: reset kernel statistics between configurations
+        (SLATE/CANDMC studies); eager persists models across configs."""
+        for st in self.ranks:
+            st.reset_models()
+        self.global_off = set()
+        self.global_stats = {}
+        self.apriori_counts = None
+
+    # -------------------------------------------------------------- decisions
+
+    def _freq(self, st: RankState, sig: Signature) -> int:
+        """The execution count used to shrink the CI (policy-dependent)."""
+        p = self.policy
+        if p.name == "conditional" or p.name == "eager":
+            return 1
+        if p.name == "apriori" and self.apriori_counts is not None:
+            return max(self.apriori_counts[st.rank].get(sig, 0), 1)
+        # local / online: current sub-critical-path running count
+        info = st.ktilde.get(sig)
+        return max(info.freq, 1) if info is not None else 1
+
+    def _extrapolatable(self, sig: Signature) -> bool:
+        """Beyond-paper: a kernel NEVER executed may be skipped when its
+        family model's validation error meets the tolerance (§VIII)."""
+        if self.extrapolator is None:
+            return False
+        pred = self.extrapolator.predict(sig)
+        return pred is not None and pred[1] <= self.policy.tolerance
+
+    def predictable(self, st: RankState, sig: Signature) -> bool:
+        if sig in self.global_off:
+            return True
+        stats = st.kbar.get(sig)
+        if stats is None or stats.n < self.policy.min_samples:
+            return self._extrapolatable(sig)
+        return stats.is_predictable(self.policy.tolerance,
+                                    self._freq(st, sig),
+                                    self.policy.min_samples)
+
+    def _predicted_mean(self, st: RankState, sig: Signature) -> float:
+        g = self.global_stats.get(sig)
+        if g is not None:
+            return g.mean
+        stats = st.kbar.get(sig)
+        if stats is not None and stats.n:
+            return stats.mean
+        if self.extrapolator is not None:
+            pred = self.extrapolator.predict(sig)
+            if pred is not None:
+                return pred[0]
+        return 0.0
+
+    def _never_ran(self, st: RankState, sig: Signature) -> bool:
+        stats = st.kbar.get(sig)
+        return stats is None or stats.n == 0
+
+    def _should_execute_local(self, st: RankState, sig: Signature) -> bool:
+        if self.force_execute:
+            return True
+        if sig in self.global_off:
+            return False
+        if self.policy.name == "eager":
+            # eager skips only once the kernel is switched off globally
+            # (predictable on some rank AND propagated machine-wide)
+            return True
+        if self.policy.once_per_iteration and sig not in st.iter_executed:
+            # beyond-paper: never-executed kernels with a validated family
+            # model may be skipped outright (§VIII extrapolation)
+            if not (self._never_ran(st, sig) and self._extrapolatable(sig)):
+                return True
+        return not self.predictable(st, sig)
+
+    # ----------------------------------------------------------- comp kernels
+
+    def on_comp(self, rank: int, sig: Signature, sampler) -> float:
+        """BLAS/LAPACK interception.  Computation kernel execution decisions
+        are made independently per processor (default policy, §III.B).
+        Returns the wall-clock time the rank spends (0 when skipped)."""
+        st = self.ranks[rank]
+        path = st.path
+        if self._should_execute_local(st, sig):
+            t = sampler(sig)
+            if self.update_stats:
+                st.stats(sig).update(t)
+            st.iter_executed.add(sig)
+            st.clock += t
+            st.measured_time += t
+            st.measured_comp += t
+            st.executed_kernels += 1
+            wall = t
+        else:
+            t = self._predicted_mean(st, sig)
+            st.skipped_kernels += 1
+            wall = 0.0
+        path.exec_time += t
+        path.comp_time += t
+        path.kernel_count += 1
+        info = st.info(sig)
+        info.freq += 1
+        return wall
+
+    # ------------------------------------------------------------ collectives
+
+    def on_coll(self, sig: Signature, comm, sampler,
+                overhead: float = 0.0) -> float:
+        """Blocking-collective interception (Figure 2, MPI_Bcast et al.).
+
+        1. internal PMPI_Allreduce over the channel: max path time wins, the
+           winner's K-tilde keys/freqs are adopted by dominated ranks
+           ('online' policy), execute votes are OR-reduced;
+        2. clocks synchronize (the internal allreduce is itself a barrier);
+        3. the user collective is selectively executed; every participant
+           invokes update_statistics on a real execution;
+        4. eager propagation invokes aggregate_statistics across the channel
+           and may switch the kernel off globally once the aggregate-channel
+           closure covers the world communicator.
+
+        Returns the post-completion clock shared by all participants.
+        """
+        ranks = comm.ranks
+        states = self.ranks
+        policy = self.policy
+
+        # -- internal allreduce: longest path wins ---------------------------
+        winner = None
+        max_path = -1.0
+        max_clock = 0.0
+        for r in ranks:
+            st = states[r]
+            if st.path.exec_time > max_path:
+                max_path = st.path.exec_time
+                winner = st
+            if st.clock > max_clock:
+                max_clock = st.clock
+        for r in ranks:
+            st = states[r]
+            if st is not winner:
+                if policy.propagates_counts:
+                    st.adopt_freqs(winner)
+                st.path.adopt(winner.path)
+
+        # -- execute vote (OR-reduced across the channel) --------------------
+        if self.force_execute:
+            execute = True
+        elif sig in self.global_off:
+            execute = False
+        elif policy.name == "eager":
+            execute = True   # until switched off by global propagation
+        else:
+            n_pred = 0
+            must = False
+            for r in ranks:
+                st = states[r]
+                if policy.once_per_iteration \
+                        and sig not in st.iter_executed \
+                        and not (self._never_ran(st, sig)
+                                 and self._extrapolatable(sig)):
+                    must = True
+                    break
+                if self.predictable(st, sig):
+                    n_pred += 1
+            execute = must or (n_pred < policy.comm_vote_fraction * len(ranks))
+
+        # -- selective execution + statistics update -------------------------
+        max_clock += overhead  # internal-allreduce profiling cost
+        if execute:
+            t = sampler(sig)
+            new_clock = max_clock + t
+            for r in ranks:
+                st = states[r]
+                if self.update_stats:
+                    st.stats(sig).update(t)
+                st.iter_executed.add(sig)
+                st.clock = new_clock
+                st.measured_time += t
+                st.executed_kernels += 1
+                st.path.exec_time += t
+                st.path.comm_time += t
+                st.path.kernel_count += 1
+                st.info(sig).freq += 1
+        else:
+            new_clock = max_clock
+            for r in ranks:
+                st = states[r]
+                t = self._predicted_mean(st, sig)
+                st.clock = new_clock
+                st.skipped_kernels += 1
+                st.path.exec_time += t
+                st.path.comm_time += t
+                st.path.kernel_count += 1
+                st.info(sig).freq += 1
+
+        # -- eager: aggregate_statistics across the channel ------------------
+        if policy.name == "eager" and comm.channel is not None:
+            self._aggregate_statistics(comm)
+        return new_clock
+
+    def _aggregate_statistics(self, comm):
+        """Figure 2's kernel-aggregation loop at blocking collectives: every
+        kernel in the participants' local sets that is deemed predictable and
+        has not yet been propagated along this channel has its statistics
+        merged and installed on all participants, and the channel is recorded
+        in the kernel's propagated set (K[i].agg_channels).  A kernel is
+        switched off globally once its propagated channels contain an
+        aggregate spanning the world communicator."""
+        states = self.ranks
+        ranks = comm.ranks
+        chash = comm.channel.hash_id
+        tol, ms = self.policy.tolerance, self.policy.min_samples
+        # candidate kernels: predictable on >= 1 participant, not yet
+        # propagated along this channel everywhere
+        cands = {}
+        for r in ranks:
+            st = states[r]
+            for sig, stats in st.kbar.items():
+                if sig in self.global_off or sig in cands:
+                    continue
+                info = st.ktilde.get(sig)
+                if info is not None and chash in info.agg_channels:
+                    continue
+                if stats.is_predictable(tol, 1, ms):
+                    cands[sig] = True
+        for sig in cands:
+            merged = KernelStats()
+            for r in ranks:
+                stats = states[r].kbar.get(sig)
+                if stats is not None:
+                    merged.merge(stats)
+            covered = False
+            for r in ranks:
+                st = states[r]
+                st.kbar[sig] = merged.copy()
+                info = st.info(sig)
+                info.agg_channels.add(chash)
+                info.is_pred = True
+                if not covered:
+                    covered = self.registry.covers_world(info.agg_channels)
+            if covered or comm.size == self.world.size:
+                self.global_off.add(sig)
+                self.global_stats[sig] = merged
+
+    # ---------------------------------------------------------- point-to-point
+
+    def p2p_vote(self, rank: int, sig: Signature) -> bool:
+        """The sender-or-receiver-local execute vote (int_msg.execute)."""
+        st = self.ranks[rank]
+        if self.force_execute:
+            return True
+        if sig in self.global_off:
+            return False
+        if self.policy.once_per_iteration and sig not in st.iter_executed:
+            if not (self._never_ran(st, sig) and self._extrapolatable(sig)):
+                return True
+        return not self.predictable(st, sig)
+
+    def on_p2p(self, src: int, dst: int, sig: Signature, sampler,
+               src_vote: bool, overhead: float = 0.0) -> float:
+        """Complete a matched BLOCKING Send/Recv pair (MPI_Recv interception:
+        internal PMPI_Sendrecv of int_msgs, max of the two paths, OR of the
+        execute votes).  Both clocks synchronize (rendezvous).
+
+        Returns the shared post-completion clock."""
+        states = self.ranks
+        s_st, r_st = states[src], states[dst]
+        execute = src_vote or self.p2p_vote(dst, sig)
+
+        # longest path wins
+        winner = s_st if s_st.path.exec_time > r_st.path.exec_time else r_st
+        loser = r_st if winner is s_st else s_st
+        if self.policy.propagates_counts:
+            loser.adopt_freqs(winner)
+        loser.path.adopt(winner.path)
+
+        base = max(s_st.clock, r_st.clock) + overhead
+        if execute:
+            t = sampler(sig)
+            done = base + t
+            for st in (s_st, r_st):
+                if self.update_stats:
+                    st.stats(sig).update(t)
+                st.iter_executed.add(sig)
+                st.measured_time += t
+                st.executed_kernels += 1
+                self._charge_comm(st, sig, t)
+        else:
+            done = base
+            for st in (s_st, r_st):
+                st.skipped_kernels += 1
+                self._charge_comm(st, sig, self._predicted_mean(st, sig))
+        s_st.clock = done
+        r_st.clock = done
+        return done
+
+    def on_isend_match(self, src: int, dst: int, sig: Signature, sampler,
+                       src_vote: bool, snapshot, overhead: float = 0.0):
+        """Complete a buffered Isend matched by a Recv (MPI_Recv + MPI_Wait
+        interception).  ``snapshot`` is (path_copy, freqs_copy_or_None,
+        post_clock) captured when the Isend was posted — the internal
+        message travels with the SENDER'S PATH AT POST TIME; the sender's
+        own state is not rewound (it has moved on), but its statistics ARE
+        updated with the completion sample (Figure 2's MPI_Wait update)."""
+        states = self.ranks
+        s_st, r_st = states[src], states[dst]
+        post_path, post_freqs, post_clock = snapshot
+        execute = src_vote or self.p2p_vote(dst, sig)
+
+        # receiver adopts the deposited path if it dominates
+        if post_path.exec_time > r_st.path.exec_time:
+            if self.policy.propagates_counts and post_freqs is not None:
+                mine = r_st.ktilde
+                for s2, f2 in post_freqs.items():
+                    pi = mine.get(s2)
+                    if pi is None:
+                        pi = r_st.info(s2)
+                    pi.freq = f2
+            r_st.path.adopt(post_path)
+
+        base = max(post_clock, r_st.clock) + overhead
+        if execute:
+            t = sampler(sig)
+            done = base + t
+            for st in (s_st, r_st):
+                if self.update_stats:
+                    st.stats(sig).update(t)
+                st.iter_executed.add(sig)
+                st.executed_kernels += 1
+            r_st.measured_time += t
+            self._charge_comm(r_st, sig, t)
+        else:
+            done = base
+            for st in (s_st, r_st):
+                st.skipped_kernels += 1
+            self._charge_comm(r_st, sig, self._predicted_mean(r_st, sig))
+        r_st.clock = done
+        return done
+
+    def _charge_comm(self, st: RankState, sig: Signature, t: float):
+        st.path.exec_time += t
+        st.path.comm_time += t
+        st.path.kernel_count += 1
+        st.info(sig).freq += 1
+
+    def isend_snapshot(self, rank: int):
+        """Capture the sender-side internal message payload at post time."""
+        st = self.ranks[rank]
+        freqs = None
+        if self.policy.propagates_counts:
+            freqs = {s: i.freq for s, i in st.ktilde.items() if i.freq}
+        return (st.path.copy(), freqs, st.clock)
+
+    # ----------------------------------------------------------------- report
+
+    def report(self) -> IterationReport:
+        pred = max(st.path.exec_time for st in self.ranks)
+        wall = max(st.clock for st in self.ranks)
+        comp = max(st.path.comp_time for st in self.ranks)
+        comm = max(st.path.comm_time for st in self.ranks)
+        meas = max(st.measured_time for st in self.ranks)
+        mcomp = max(st.measured_comp for st in self.ranks)
+        ex = sum(st.executed_kernels for st in self.ranks)
+        sk = sum(st.skipped_kernels for st in self.ranks)
+        return IterationReport(pred, wall, comp, comm, meas, mcomp, ex, sk,
+                               ex + sk)

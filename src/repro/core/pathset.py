@@ -1,0 +1,116 @@
+"""Per-rank pathsets and kernel sets.
+
+Each processor owns (paper §III.B):
+
+- ``K-bar``   — performance statistics for each locally-executed kernel;
+- ``K-tilde`` — per-kernel info along its *current sub-critical path*
+                (execution counts/frequencies, predictability flags);
+- pathset ``P`` — the accumulated cost metrics of the rank's current
+                sub-critical path (exec time, and the breakdown into
+                computation / communication time used by the paper's
+                critical-path metrics).
+
+Path-profile quantities (exec/comp/comm time estimates) travel with the
+longest-path adoption protocol; *physical* quantities — the wall-clock the
+rank actually spends under selective execution (``clock``) and the time it
+spends really executing kernels (``measured_*``) — are per-rank and are
+never adopted.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .signatures import Signature
+from .stats import KernelStats, PathKernelInfo
+
+
+class PathProfile:
+    """The pathset P: cost metrics accumulated along the current
+    sub-critical path of one rank.  Adopted wholesale when a communication
+    partner's path dominates (longest-path algorithm)."""
+
+    __slots__ = ("exec_time", "comp_time", "comm_time", "kernel_count")
+
+    def __init__(self, exec_time=0.0, comp_time=0.0, comm_time=0.0,
+                 kernel_count=0):
+        self.exec_time = exec_time
+        self.comp_time = comp_time
+        self.comm_time = comm_time
+        self.kernel_count = kernel_count
+
+    def copy(self) -> "PathProfile":
+        return PathProfile(self.exec_time, self.comp_time, self.comm_time,
+                           self.kernel_count)
+
+    def adopt(self, other: "PathProfile") -> None:
+        self.exec_time = other.exec_time
+        self.comp_time = other.comp_time
+        self.comm_time = other.comm_time
+        self.kernel_count = other.kernel_count
+
+
+class RankState:
+    """All Critter state owned by one virtual rank."""
+
+    __slots__ = ("rank", "kbar", "ktilde", "path", "clock",
+                 "measured_time", "measured_comp", "iter_executed",
+                 "executed_kernels", "skipped_kernels")
+
+    def __init__(self, rank: int):
+        self.rank = rank
+        self.kbar: Dict[Signature, KernelStats] = {}
+        self.ktilde: Dict[Signature, PathKernelInfo] = {}
+        self.path = PathProfile()
+        # wall-clock the rank actually spends under selective execution: the
+        # discrete-event clock.  path.exec_time is the *estimated*
+        # full-execution time along the rank's current sub-critical path.
+        self.clock = 0.0
+        self.measured_time = 0.0    # time spent really executing kernels
+        self.measured_comp = 0.0    # ... computation portion (Fig 4c/5c)
+        self.iter_executed = set()  # signatures executed this tuning iteration
+        self.executed_kernels = 0
+        self.skipped_kernels = 0
+
+    def stats(self, sig: Signature) -> KernelStats:
+        st = self.kbar.get(sig)
+        if st is None:
+            st = KernelStats()
+            self.kbar[sig] = st
+        return st
+
+    def info(self, sig: Signature) -> PathKernelInfo:
+        pi = self.ktilde.get(sig)
+        if pi is None:
+            pi = PathKernelInfo()
+            self.ktilde[sig] = pi
+        return pi
+
+    def adopt_freqs(self, winner: "RankState") -> None:
+        """Adopt the dominating rank's critical-path kernel frequencies
+        (Figure 2: K[:].freq = int_gmsg.freqs) — 'online' policy only."""
+        mine = self.ktilde
+        for sig, info in winner.ktilde.items():
+            pi = mine.get(sig)
+            if pi is None:
+                pi = PathKernelInfo()
+                mine[sig] = pi
+            pi.freq = info.freq
+
+    def reset_iteration(self) -> None:
+        """Reset per-iteration path state (start of a configuration run)."""
+        self.path = PathProfile()
+        self.clock = 0.0
+        self.measured_time = 0.0
+        self.measured_comp = 0.0
+        self.iter_executed = set()
+        self.executed_kernels = 0
+        self.skipped_kernels = 0
+        for info in self.ktilde.values():
+            info.freq = 0
+
+    def reset_models(self) -> None:
+        """Forget all kernel statistics (paper: 'we reset the performance
+        statistics of all kernels before tuning a new configuration')."""
+        self.kbar = {}
+        self.ktilde = {}

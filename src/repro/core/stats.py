@@ -1,0 +1,155 @@
+"""Single-pass statistical models of kernel execution time.
+
+Implements the paper's statistical characterization (§III.A):
+
+- every kernel signature's measured time is a random variable X with finite
+  mean/variance; we keep a Welford single-pass estimator of (mean, M2);
+- the confidence interval for the sample mean uses the (scaled) sample
+  variance at a 95% confidence level (the paper's default);
+- knowledge that a kernel executes ``k`` times along the current sub-critical
+  path lets us assign sample variance ``sigma^2 / k`` to its contribution,
+  shrinking the confidence interval needed per kernel by ``sqrt(k)``
+  (paper: "Knowing that the number of times a kernel is executed along the
+  critical path is alpha allows us to assign a sample variance sigma^2/alpha
+  ... reduces the confidence interval ... by a factor sqrt(alpha)").
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+# 95% two-sided normal quantile. The paper constructs 95% confidence
+# intervals from the scaled sample variance; for very small n we widen via a
+# small-sample t-style correction table (indexed by dof) so that 2-3 samples
+# are not spuriously declared "predictable".
+Z_95 = 1.959963984540054
+
+# student-t 97.5% quantiles for dof 1..30 (then ~z).
+_T_975 = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+]
+
+
+def t_quantile_975(dof: int) -> float:
+    if dof <= 0:
+        return math.inf
+    if dof <= len(_T_975):
+        return _T_975[dof - 1]
+    return Z_95
+
+
+@dataclass
+class KernelStats:
+    """Welford single-pass estimator of a kernel signature's execution time.
+
+    This is the per-signature record the paper stores in the local kernel set
+    (K-bar): sample count, mean, M2 (sum of squared deviations), plus
+    min/max/total for reporting.
+    """
+
+    n: int = 0
+    mean: float = 0.0
+    m2: float = 0.0
+    total: float = 0.0
+    min_t: float = math.inf
+    max_t: float = 0.0
+
+    def update(self, x: float) -> None:
+        self.n += 1
+        delta = x - self.mean
+        self.mean += delta / self.n
+        self.m2 += delta * (x - self.mean)
+        self.total += x
+        if x < self.min_t:
+            self.min_t = x
+        if x > self.max_t:
+            self.max_t = x
+
+    def merge(self, other: "KernelStats") -> None:
+        """Chan et al. parallel merge — used when propagating statistics
+        across channels (aggregate_statistics in Figure 2)."""
+        if other.n == 0:
+            return
+        if self.n == 0:
+            self.n = other.n
+            self.mean = other.mean
+            self.m2 = other.m2
+            self.total = other.total
+            self.min_t = other.min_t
+            self.max_t = other.max_t
+            return
+        n = self.n + other.n
+        delta = other.mean - self.mean
+        self.mean += delta * other.n / n
+        self.m2 += other.m2 + delta * delta * self.n * other.n / n
+        self.n = n
+        self.total += other.total
+        self.min_t = min(self.min_t, other.min_t)
+        self.max_t = max(self.max_t, other.max_t)
+
+    # -- derived quantities -------------------------------------------------
+
+    @property
+    def variance(self) -> float:
+        """Unbiased sample variance."""
+        if self.n < 2:
+            return math.inf
+        return self.m2 / (self.n - 1)
+
+    @property
+    def std(self) -> float:
+        v = self.variance
+        return math.sqrt(v) if v != math.inf else math.inf
+
+    def ci_halfwidth(self, freq: int = 1) -> float:
+        """95% CI half-width of the sample mean, shrunk by sqrt(freq).
+
+        ``freq`` is the kernel's execution count along the current
+        sub-critical path (alpha in the paper); passing freq=1 recovers the
+        plain CI (the ``conditional execution`` policy).
+        """
+        if self.n < 2:
+            return math.inf
+        q = t_quantile_975(self.n - 1)
+        hw = q * self.std / math.sqrt(self.n)
+        if freq > 1:
+            hw /= math.sqrt(freq)
+        return hw
+
+    def relative_ci(self, freq: int = 1) -> float:
+        """epsilon-tilde: CI size divided by sample mean (paper §III.A)."""
+        if self.mean <= 0.0:
+            return math.inf
+        return self.ci_halfwidth(freq) / self.mean
+
+    def is_predictable(self, tolerance: float, freq: int = 1,
+                       min_samples: int = 2) -> bool:
+        """True once relative CI size falls below the confidence tolerance."""
+        if self.n < min_samples:
+            return False
+        return self.relative_ci(freq) <= tolerance
+
+    def copy(self) -> "KernelStats":
+        return KernelStats(self.n, self.mean, self.m2, self.total,
+                           self.min_t, self.max_t)
+
+
+@dataclass
+class PathKernelInfo:
+    """Per-signature record in the critical-path kernel set (K-tilde):
+    the execution count (freq) along the current sub-critical path plus the
+    propagation bookkeeping used by the channel/aggregate machinery."""
+
+    freq: int = 0
+    # signature considered predictable by the owning rank (is_pred in Fig. 2)
+    is_pred: bool = False
+    # hashes of aggregate channels this kernel's stats have been propagated
+    # along (Figure 2: K[i].agg_channels); when the registered aggregates
+    # cover the world communicator the kernel can be switched off globally.
+    agg_channels: set = field(default_factory=set)
+
+    def copy(self) -> "PathKernelInfo":
+        return PathKernelInfo(self.freq, self.is_pred, set(self.agg_channels))

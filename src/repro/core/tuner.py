@@ -1,0 +1,268 @@
+"""The approximate autotuner.
+
+Drives a configuration-space search over a study (a set of schedule
+configurations sharing a virtual machine), measuring what the paper
+measures (§VI.A):
+
+- per-configuration *relative prediction error*: selective-execution
+  estimate vs a full execution performed directly prior;
+- *autotuning speedup*: total benchmark time under full kernel execution vs
+  under selective execution (including policy extras such as the a-priori
+  offline pass);
+- *optimum selection quality*: the configuration the tuner would pick vs
+  the configuration a full-execution exhaustive search picks.
+
+Exhaustive search mirrors the paper's evaluation; ``tune_racing`` is the
+beyond-paper integration of the paper's own confidence intervals with a
+racing/successive-halving search that prunes configurations whose CI lower
+bound exceeds the incumbent's upper bound.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.simmpi.comm import World
+from repro.simmpi.costmodel import CostModel, MachineSpec, KNL_STAMPEDE2
+from repro.simmpi.runtime import Runtime
+from .critter import Critter
+from .policies import Policy
+from .stats import KernelStats, t_quantile_975
+
+
+@dataclass
+class Configuration:
+    """One point of the tuning space: a named schedule generator."""
+
+    name: str
+    params: dict
+    # make_program(world) -> program_factory(rank, world) -> generator
+    make_program: Callable[[World], Callable]
+
+
+@dataclass
+class Study:
+    """A tuning study: configurations sharing one virtual machine."""
+
+    name: str
+    world_size: int
+    configs: List[Configuration]
+    # paper §VI.A: SLATE/CANDMC reset kernel statistics between
+    # configurations; Capital does not (eager reuses models across configs)
+    reset_between_configs: bool = True
+    machine: MachineSpec = KNL_STAMPEDE2
+
+
+@dataclass
+class ConfigRecord:
+    name: str
+    params: dict
+    full_time: float
+    predicted: float
+    rel_error: float
+    comp_error: float
+    selective_cost: float     # wall time paid for this config's trials
+    full_cost: float          # what full execution would have paid
+    executed: int
+    skipped: int
+    predictions: List[float] = field(default_factory=list)
+
+
+@dataclass
+class StudyReport:
+    study: str
+    policy: str
+    tolerance: float
+    records: List[ConfigRecord]
+    full_tuning_time: float
+    selective_tuning_time: float
+
+    @property
+    def speedup(self) -> float:
+        if self.selective_tuning_time <= 0:
+            return math.inf
+        return self.full_tuning_time / self.selective_tuning_time
+
+    @property
+    def mean_error(self) -> float:
+        return float(np.mean([r.rel_error for r in self.records]))
+
+    @property
+    def mean_comp_error(self) -> float:
+        return float(np.mean([r.comp_error for r in self.records]))
+
+    @property
+    def chosen(self) -> ConfigRecord:
+        return min(self.records, key=lambda r: r.predicted)
+
+    @property
+    def true_best(self) -> ConfigRecord:
+        return min(self.records, key=lambda r: r.full_time)
+
+    @property
+    def optimum_quality(self) -> float:
+        """full-execution time of the truly-best config divided by that of
+        the chosen config (1.0 = optimal choice; paper reports >= 0.99)."""
+        return self.true_best.full_time / self.chosen.full_time
+
+    def row(self) -> dict:
+        return {
+            "study": self.study, "policy": self.policy,
+            "tolerance": self.tolerance, "speedup": self.speedup,
+            "mean_error": self.mean_error,
+            "mean_comp_error": self.mean_comp_error,
+            "optimum_quality": self.optimum_quality,
+            "full_time": self.full_tuning_time,
+            "selective_time": self.selective_tuning_time,
+        }
+
+
+class Autotuner:
+    """Exhaustive (paper) and racing (beyond-paper) searches."""
+
+    def __init__(self, study: Study, policy: Policy, *,
+                 trials: int = 3, seed: int = 0, allocation: int = 0,
+                 timer: Optional[Callable] = None,
+                 cost_model: Optional[CostModel] = None,
+                 overhead: float = 1e-6):
+        self.study = study
+        self.policy = policy
+        self.trials = trials
+        self.world = World(study.world_size)
+        self.critter = Critter(self.world, policy)
+        if timer is None:
+            cm = cost_model or CostModel(study.machine, allocation=allocation,
+                                         seed=seed)
+            timer = cm.sample
+        self.runtime = Runtime(self.world, self.critter, timer,
+                               seed=seed + 17 * allocation, overhead=overhead)
+
+    # -- exhaustive (the paper's evaluation protocol) -------------------------
+
+    def run_config(self, cfg: Configuration) -> ConfigRecord:
+        rt, critter = self.runtime, self.critter
+        prog = cfg.make_program(self.world)
+
+        # full execution performed directly prior to the approximated one
+        # (measures prediction error; does not feed the models)
+        ref = rt.run(prog, force_execute=True, update_stats=False)
+        full_time = ref.wall_time
+        full_comp = ref.crit_comp
+
+        selective_cost = 0.0
+        if self.policy.needs_offline_pass:
+            off = rt.run(prog, force_execute=True, update_stats=True)
+            critter.snapshot_apriori_counts()
+            selective_cost += off.wall_time
+
+        predictions: List[float] = []
+        last = None
+        for _ in range(self.trials):
+            last = rt.run(prog)
+            selective_cost += last.wall_time
+            predictions.append(last.predicted_time)
+
+        predicted = predictions[-1]
+        rel_error = abs(predicted - full_time) / full_time
+        comp_error = (abs(last.crit_comp - full_comp) / full_comp
+                      if full_comp > 0 else 0.0)
+        return ConfigRecord(
+            name=cfg.name, params=cfg.params, full_time=full_time,
+            predicted=predicted, rel_error=rel_error, comp_error=comp_error,
+            selective_cost=selective_cost,
+            full_cost=full_time * self.trials,
+            executed=last.executed, skipped=last.skipped,
+            predictions=predictions)
+
+    def tune(self) -> StudyReport:
+        records = []
+        for i, cfg in enumerate(self.study.configs):
+            if i > 0 and self.study.reset_between_configs:
+                self.critter.reset_models()
+            records.append(self.run_config(cfg))
+        return StudyReport(
+            study=self.study.name, policy=self.policy.name,
+            tolerance=self.policy.tolerance, records=records,
+            full_tuning_time=sum(r.full_cost for r in records),
+            selective_tuning_time=sum(r.selective_cost for r in records))
+
+    # -- racing search (beyond-paper) ------------------------------------------
+
+    def tune_racing(self, *, max_rounds: int = 6,
+                    min_survivor_trials: int = 2) -> "RacingReport":
+        """Successive elimination driven by the paper's own CIs.
+
+        Each round gives every surviving configuration one selective
+        benchmark; a configuration is pruned once the lower CI bound of its
+        predicted time exceeds the upper CI bound of the incumbent.  The
+        per-kernel statistical machinery is reused verbatim — racing only
+        changes *which* configurations keep getting iterations, exactly the
+        composition the paper suggests with search-space pruning studies.
+        """
+        rt, critter = self.runtime, self.critter
+        cfgs = list(self.study.configs)
+        progs = {c.name: c.make_program(self.world) for c in cfgs}
+        samples: Dict[str, List[float]] = {c.name: [] for c in cfgs}
+        active = {c.name for c in cfgs}
+        cost = 0.0
+        pruned_at: Dict[str, int] = {}
+
+        def ci(name):
+            xs = samples[name]
+            n = len(xs)
+            m = float(np.mean(xs))
+            if n < 2:
+                return m, math.inf
+            hw = t_quantile_975(n - 1) * float(np.std(xs, ddof=1)) / math.sqrt(n)
+            return m, hw
+
+        for rnd in range(max_rounds):
+            for c in cfgs:
+                if c.name not in active:
+                    continue
+                if self.study.reset_between_configs and len(cfgs) > 1:
+                    # racing interleaves configs; resetting would discard
+                    # everything each step — keep models per config name
+                    pass
+                res = rt.run(progs[c.name])
+                cost += res.wall_time
+                samples[c.name].append(res.predicted_time)
+            # prune
+            stats = {nm: ci(nm) for nm in active}
+            inc = min(stats, key=lambda nm: stats[nm][0])
+            inc_hi = stats[inc][0] + stats[inc][1]
+            for nm in list(active):
+                if nm == inc:
+                    continue
+                m, hw = stats[nm]
+                if len(samples[nm]) >= min_survivor_trials and m - hw > inc_hi:
+                    active.remove(nm)
+                    pruned_at[nm] = rnd
+            if len(active) == 1:
+                break
+        best = min(active, key=lambda nm: float(np.mean(samples[nm])))
+        return RacingReport(study=self.study.name, policy=self.policy.name,
+                            tolerance=self.policy.tolerance,
+                            best=best, cost=cost, samples=samples,
+                            pruned_at=pruned_at,
+                            survivors=sorted(active))
+
+
+@dataclass
+class RacingReport:
+    study: str
+    policy: str
+    tolerance: float
+    best: str
+    cost: float
+    samples: Dict[str, List[float]]
+    pruned_at: Dict[str, int]
+    survivors: List[str]
+
+    @property
+    def total_iterations(self) -> int:
+        return sum(len(v) for v in self.samples.values())

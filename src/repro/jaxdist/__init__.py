@@ -1,0 +1,17 @@
+"""jaxdist — the paper's dense linear algebra as real JAX shard_map
+programs (the simmpi layer *simulates* the schedules for the autotuning
+study; this package *executes* them on a device mesh).
+
+- matmul3d: Agarwal/ACS 3D matmul — broadcast along two mesh axes, reduce
+  along the third (the communication pattern of Capital's Cholesky products)
+- cholesky3d: Capital's recursive Cholesky(+inverse) over the 3D mesh with
+  replicated base-case factorization (base strategy 2 of the paper)
+- tsqr: communication-avoiding tall-skinny QR over the row axis (CANDMC's
+  panel kernel)
+"""
+
+from .matmul3d import matmul_3d, make_3d_mesh
+from .cholesky3d import cholesky_3d
+from .tsqr import tsqr
+
+__all__ = ["matmul_3d", "make_3d_mesh", "cholesky_3d", "tsqr"]

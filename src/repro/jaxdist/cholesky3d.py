@@ -1,0 +1,77 @@
+"""Capital's recursive Cholesky (+ triangular inverse) on the 3D mesh.
+
+    [A11      ]   [L11     ] [L11^T L21^T]
+    [A21  A22 ] = [L21  L22] [      L22^T]
+
+Base case (paper strategy 2): the sub-block is gathered (replicated
+sharding constraint) and factorized redundantly on every device —
+all-gather + redundant potrf/trtri.  Products L21 = A21 L11^{-T} and
+S = A22 - L21 L21^T run through the 3D matmul kernel.  The inverse is
+maintained through the recursion (Capital's inverse-based formulation):
+
+    inv([L11 0; L21 L22]) = [Linv11 0; -Linv22 L21 Linv11, Linv22]
+
+The block-size trade-off (few large base cases vs many small ones +
+more 3D products) is the latency/bandwidth knob the autotuning study
+sweeps (simmpi reproduces the cost side; this module proves the schedule
+is a real runnable JAX program).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .matmul3d import matmul_3d
+
+
+def _constrain(x, mesh, spec):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _base(a, mesh):
+    """Replicated base-case factorization: L, L^{-1} (strategy 2)."""
+    a = _constrain(a, mesh, P())        # all-gather, factor redundantly
+    l = jnp.linalg.cholesky(a)
+    linv = jax.scipy.linalg.solve_triangular(
+        l, jnp.eye(a.shape[0], dtype=a.dtype), lower=True)
+    return l, linv
+
+
+def cholesky_3d(a, mesh: Mesh, block: int):
+    """a: (n, n) SPD, laid out P('x', 'y').  Returns (L, Linv) in the same
+    layout.  n and block must be powers of two with block | n."""
+    n = a.shape[0]
+    if n <= block:
+        l, linv = _base(a, mesh)
+        return (_constrain(l, mesh, P("x", "y")),
+                _constrain(linv, mesh, P("x", "y")))
+    h = n // 2
+    a11 = a[:h, :h]
+    a21 = a[h:, :h]
+    a22 = a[h:, h:]
+
+    l11, linv11 = cholesky_3d(a11, mesh, block)
+    # L21 <- A21 . L11^{-T}           (3D product)
+    a21_xz = _constrain(a21, mesh, P("x", "z"))
+    linv11t_zy = _constrain(linv11.T, mesh, P("z", "y"))
+    l21 = matmul_3d(a21_xz, linv11t_zy, mesh)
+    # S <- A22 - L21 . L21^T          (3D symmetric update)
+    l21_xz = _constrain(l21, mesh, P("x", "z"))
+    l21t_zy = _constrain(l21.T, mesh, P("z", "y"))
+    s = a22 - matmul_3d(l21_xz, l21t_zy, mesh)
+    l22, linv22 = cholesky_3d(s, mesh, block)
+    # Linv21 <- -Linv22 . L21 . Linv11
+    t = matmul_3d(_constrain(l21, mesh, P("x", "z")),
+                  _constrain(linv11, mesh, P("z", "y")), mesh)
+    linv21 = -matmul_3d(_constrain(linv22, mesh, P("x", "z")),
+                        _constrain(t, mesh, P("z", "y")), mesh)
+
+    zero = jnp.zeros((h, h), a.dtype)
+    l = jnp.block([[l11, zero], [l21, l22]])
+    linv = jnp.block([[linv11, zero], [linv21, linv22]])
+    return (_constrain(l, mesh, P("x", "y")),
+            _constrain(linv, mesh, P("x", "y")))

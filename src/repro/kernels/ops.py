@@ -1,0 +1,39 @@
+"""jit'd dispatch wrappers: Pallas kernel on TPU, interpret mode elsewhere.
+
+The model layer can swap these in for the jnp reference path (a ModelKnobs
+choice); tests sweep shapes/dtypes asserting allclose against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .matmul import matmul_pallas
+from .rmsnorm import rmsnorm_pallas
+from . import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, **kw):
+    return matmul_pallas(a, b, interpret=_interpret(), **kw)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, **kw):
+    return rmsnorm_pallas(x, w, eps=eps, interpret=_interpret(), **kw)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, **kw):
+    """(B, Sq, H, d) layout (model-native); transposes into kernel layout."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    ot = flash_attention_pallas(qt, kt, vt, causal=causal,
+                                interpret=_interpret(), **kw)
+    return ot.transpose(0, 2, 1, 3)

@@ -1,0 +1,162 @@
+"""Cell builder: (arch x shape x mesh x sharding-variant x knobs) -> a
+lowerable step function with fully-specified input shardings and
+ShapeDtypeStruct arguments.  Shared by the dry-run, the roofline benchmarks
+and the LM autotuner (tune/), so every consumer lowers the SAME programs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ArchConfig, Shape
+from repro.models.model import Model, ModelKnobs
+from repro.parallel.sharding import (ShardingRules, axis_rules, make_rules,
+                                     map_axes)
+from repro.train.optim import adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+DRYRUN_KNOBS = ModelKnobs(kv_chunk=512, ssm_chunk=256, remat="full",
+                          param_dtype=jnp.bfloat16,
+                          compute_dtype=jnp.bfloat16)
+
+# baseline microbatching: 4 grad-accumulation slices (a tuning knob; the
+# paper-faithful baseline just needs to FIT — see EXPERIMENTS.md §Perf)
+DRYRUN_TRAIN = TrainConfig(grad_accum=4)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    variant: str
+    fn: Callable
+    args: Tuple            # ShapeDtypeStructs
+    in_shardings: Tuple
+    donate: Tuple[int, ...]
+    cfg: ArchConfig
+    model: Model
+    rules: ShardingRules
+
+    def lower(self):
+        jfn = jax.jit(self.fn, in_shardings=self.in_shardings,
+                      donate_argnums=self.donate)
+        return jfn.lower(*self.args)
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _ns(rules: ShardingRules, axes_tree, sds_tree):
+    def one(ax, sds):
+        return NamedSharding(rules.mesh, rules.spec(*ax, dims=sds.shape))
+    return map_axes(one, axes_tree, sds_tree)
+
+
+def batch_sds(cfg: ArchConfig, shape: Shape, knobs: ModelKnobs):
+    """(ShapeDtypeStructs, logical axes) for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.n_patches:
+        S_text = S - cfg.n_patches
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S_text), i32),
+               "labels": jax.ShapeDtypeStruct((B, S_text), i32),
+               "patches": jax.ShapeDtypeStruct(
+                   (B, cfg.n_patches, cfg.d_model), knobs.compute_dtype)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+                "patches": ("batch", None, None)}
+    elif cfg.n_codebooks:
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32),
+               "labels": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32)}
+        axes = {"tokens": ("batch", "seq", None),
+                "labels": ("batch", "seq", None)}
+    else:
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if shape.kind == "prefill":
+        sds.pop("labels")
+        axes.pop("labels")
+    return sds, axes
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               variant: str = "cp", knobs: Optional[ModelKnobs] = None,
+               tc: Optional[TrainConfig] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    knobs = knobs or DRYRUN_KNOBS
+    if tc is None:
+        # >50B-param archs need deeper accumulation to fit activations;
+        # bf16 grad accumulation adopted as their default after §Perf H3
+        big = cfg.param_counts()["total"] > 50e9
+        tc = TrainConfig(grad_accum=8, accum_dtype=jnp.bfloat16) if big \
+            else DRYRUN_TRAIN
+    rules = make_rules(variant).with_mesh(mesh)
+    model = Model(cfg, knobs)
+
+    params_sds = _sds(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    p_sh = _ns(rules, model.param_axes(), params_sds)
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "step": NamedSharding(mesh, P())}
+        b_sds, b_axes = batch_sds(cfg, shape, knobs)
+        b_sh = _ns(rules, b_axes, b_sds)
+        fn = make_train_step(model, rules, tc)
+        return Cell(arch, shape_name, variant, fn,
+                    (params_sds, opt_sds, b_sds), (p_sh, o_sh, b_sh),
+                    (0, 1), cfg, model, rules)
+
+    if shape.kind == "prefill":
+        b_sds, b_axes = batch_sds(cfg, shape, knobs)
+        b_sh = _ns(rules, b_axes, b_sds)
+
+        def prefill_fn(params, batch):
+            with axis_rules(rules):
+                return model.prefill(params, batch, shape.seq_len)
+
+        return Cell(arch, shape_name, variant, prefill_fn,
+                    (params_sds, b_sds), (p_sh, b_sh), (), cfg, model, rules)
+
+    # decode: one new token against a seq_len cache
+    B, S = shape.global_batch, shape.seq_len
+    cache_sds = _sds(jax.eval_shape(partial(model.init_cache, B, S)))
+    c_sh = _ns(rules, model.cache_axes(), cache_sds)
+    t_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    t_sh = NamedSharding(mesh, rules.spec("batch", dims=(B,)))
+    trail = (cfg.n_codebooks,) if cfg.n_codebooks else ()
+    tok_sds = {"tokens": jax.ShapeDtypeStruct((B, 1) + trail, jnp.int32)}
+    tok_ax = {"tokens": ("batch", None) + ((None,) if trail else ())}
+    tok_sh = _ns(rules, tok_ax, tok_sds)
+
+    def serve_step(params, cache, t, batch):
+        with axis_rules(rules):
+            return model.decode_step(params, cache, t, batch)
+
+    return Cell(arch, shape_name, variant, serve_step,
+                (params_sds, cache_sds, t_sds, tok_sds),
+                (p_sh, c_sh, t_sh, tok_sh), (1,), cfg, model, rules)
+
+
+def model_flops(cfg: ArchConfig, shape: Shape) -> float:
+    """MODEL_FLOPS: 6·N·D (train) / 2·N·D (inference), N = active body
+    params + embed/head matmul params, D = tokens processed per step."""
+    pc = cfg.param_counts()
+    n_active = pc["body_active"] + pc["embed"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every runnable (architecture x input shape) cell on the
+single-pod 16x16 mesh AND the 2x16x16 multi-pod mesh, prints
+memory_analysis()/cost_analysis(), and writes one JSON artifact per cell
+under --out (consumed by benchmarks/roofline.py and EXPERIMENTS.md).
+
+The two os.environ lines above MUST run before any other import — jax locks
+the device count at first init.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --all --variant tp --suffix _tp
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, all_cells, get_config
+from repro.launch.cells import build_cell, model_flops, DRYRUN_KNOBS
+from repro.launch.hlo_analysis import (collective_stats, cpu_upcast_bytes,
+                                       op_census, roofline_terms)
+from repro.launch.hlo_graph import collective_stats_trip_aware, while_census
+from repro.launch.jaxpr_cost import cost_of
+from repro.launch.mesh import make_production_mesh
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "artifacts")
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, variant: str = "cp",
+             knobs=None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape, mesh, variant=variant, knobs=knobs)
+    t0 = time.time()
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    n_chips = mesh.devices.size
+
+    # scan-aware program cost (global) from the jaxpr — XLA's cost analysis
+    # visits while bodies once and is kept only as a reference lower bound
+    t0 = time.time()
+    jc = cost_of(cell.fn, *cell.args)
+    t_jaxpr = time.time() - t0
+    coll = collective_stats_trip_aware(hlo)
+    coll_flat = collective_stats(hlo)
+    flops_per_dev = jc.flops / n_chips
+    bytes_per_dev = jc.bytes / n_chips
+    terms = roofline_terms(flops_per_dev, bytes_per_dev, coll.total_bytes)
+
+    mf = model_flops(cell.cfg, SHAPES[shape])
+    _upc = cpu_upcast_bytes(hlo)
+    _live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+             - mem.alias_size_in_bytes - _upc)
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": list(mesh.devices.shape), "axes": list(mesh.axis_names),
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "jaxpr_cost_s": round(t_jaxpr, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            # f32 copies of bf16 entry params: CPU-backend bf16 emulation,
+            # absent on TPU — subtracted for the fits-in-HBM estimate
+            "cpu_upcast_bytes": _upc,
+            "live_tpu_est_bytes": _live,
+            "fits_16g": _live <= 16 * (1 << 30),
+        },
+        "jaxpr_cost": {"flops_global": jc.flops, "bytes_global": jc.bytes,
+                       "dot_flops_global": jc.dot_flops},
+        "xla_cost_raw": {k: cost[k] for k in ("flops", "bytes accessed")
+                         if k in cost},
+        "collectives": {
+            "total_bytes_per_dev": coll.total_bytes,
+            "by_kind": coll.bytes_by_kind,
+            "counts": coll.count_by_kind,
+            "flat_bytes_per_dev": coll_flat.total_bytes,
+        },
+        "ops": op_census(hlo),
+        "whiles": while_census(hlo),
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / jc.flops if jc.flops else 0.0),
+    }
+    if verbose:
+        gb = 1 << 30
+        upc, live = _upc, _live
+        print(f"[{arch} x {shape} x {variant} @ "
+              f"{'x'.join(map(str, mesh.devices.shape))}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  mem/dev: args {mem.argument_size_in_bytes / gb:.2f} GiB"
+              f" temps {mem.temp_size_in_bytes / gb:.2f} GiB"
+              f" cpu-upcast {upc / gb:.2f} GiB"
+              f" -> live(TPU est) {live / gb:.2f} GiB"
+              f" (fits 16 GiB: {live / gb <= 16.0})")
+        print(f"  flops/dev {terms['hlo_flops_per_dev']:.3e}"
+              f"  bytes/dev {terms['hlo_bytes_per_dev']:.3e}"
+              f"  coll bytes/dev {terms['collective_bytes_per_dev']:.3e}")
+        print(f"  roofline s: compute {terms['compute_s']:.4f}"
+              f" memory {terms['memory_s']:.4f}"
+              f" collective {terms['collective_s']:.4f}"
+              f"  -> {terms['bound']}-bound;"
+              f" useful-flops ratio {rec['useful_flops_ratio']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--variant", default="cp")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--suffix", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'multi' if mp else 'single'}" \
+                  f"{args.suffix}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               variant=args.variant)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:  # a failure here is a bug in the system
+                failures.append((tag, repr(e)))
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        raise SystemExit(1)
+    print("\ndry-run complete: all cells lowered + compiled.")
+
+
+if __name__ == "__main__":
+    main()

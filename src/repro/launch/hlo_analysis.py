@@ -1,0 +1,192 @@
+"""Post-SPMD HLO analysis: collective operand bytes + op census.
+
+``cost_analysis()`` has no collective term, so the roofline's third term is
+parsed from the compiled module text.  In scheduled HLO the operand types
+are not inlined at the call site, so per-device injected bytes are derived
+from the RESULT type and the replica group size g:
+
+    all-reduce          operand = result              (R)
+    all-gather          operand = result / g          (each device injects R/g)
+    reduce-scatter      operand = result * g          (input is g x output)
+    all-to-all          operand = result              (R leaves the device)
+    collective-permute  operand = result              (R forwarded)
+
+Async pairs (-start/-done) are counted once at the start op (whose LHS tuple
+carries the true operand type — used directly).  Numbers are per-device —
+matching cost_analysis()'s per-device flops/bytes, so
+
+    collective_s = per-device collective bytes / link_bw
+
+is algebraically the spec's global-bytes / (chips x link_bw).
+
+NOTE: ops inside while bodies are counted ONCE here; use
+``hlo_graph.collective_stats_trip_aware`` for scan-aware totals (the number
+the roofline uses).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  bf16[32,2048,8,128]   or   f32[]
+_TYPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9]+m[0-9]+(?:fn)?)?|pred)"
+                      r"\[([0-9,]*)\]")
+# op name at the assignment site:  %foo.1 = <type(s)> op-name(...)
+_OP_RE = re.compile(r"=\s*[^=]*?\s([a-z][a-z0-9-]*)\(")
+_GROUPS_BRACKET = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPLICIT = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def group_size(line: str) -> int:
+    m = _GROUPS_BRACKET.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collective_line(line: str) -> Optional[Tuple[str, int]]:
+    """(base op kind, per-device operand bytes) or None."""
+    m = _OP_RE.search(line)
+    if not m:
+        return None
+    op = m.group(1)
+    base = op[:-6] if op.endswith("-start") else op
+    if base not in COLLECTIVES or op.endswith("-done"):
+        return None
+    lhs = line[:m.end() - len(base) - (6 if op.endswith("-start") else 0) - 1]
+    types = _TYPE_RE.findall(lhs)
+    if not types:
+        return base, 0
+    g = group_size(line)
+    if op.endswith("-start") and len(types) >= 2:
+        nbytes = _nbytes(*types[0])          # explicit operand in the tuple
+    else:
+        result = _nbytes(*types[0])
+        if base == "all-gather":
+            nbytes = result // max(g, 1)
+        elif base == "reduce-scatter":
+            nbytes = result * g
+        else:
+            nbytes = result
+    return base, nbytes
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def rows(self) -> List[Tuple[str, int, int]]:
+        return sorted(
+            ((k, self.count_by_kind[k], self.bytes_by_kind[k])
+             for k in self.bytes_by_kind),
+            key=lambda r: -r[2])
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Flat (trip-unaware) per-device operand-bytes census."""
+    by = defaultdict(int)
+    cnt = defaultdict(int)
+    for line in hlo_text.splitlines():
+        parsed = parse_collective_line(line)
+        if parsed:
+            base, nbytes = parsed
+            by[base] += nbytes
+            cnt[base] += 1
+    return CollectiveStats(dict(by), dict(cnt))
+
+
+def op_census(hlo_text: str, ops=("dot", "fusion", "custom-call",
+                                  "dynamic-slice", "dynamic-update-slice",
+                                  "transpose", "reshape", "while")) -> Dict[str, int]:
+    cnt = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m and m.group(1) in ops:
+            cnt[m.group(1)] += 1
+    return dict(cnt)
+
+
+_UPCAST_RE = re.compile(
+    r"^(?:ROOT\s+)?%(\S+)\s+= f32\[([0-9,]+)\]\S*\s+"
+    r"(?:fusion|convert|copy)\(%param(?:\.|\d)")
+
+
+def cpu_upcast_bytes(hlo_text: str) -> int:
+    """Bytes of f32 copies of bf16 ENTRY parameters.
+
+    The XLA CPU backend emulates bf16 by upconverting operands to f32; these
+    buffers would not exist on a TPU (native bf16 compute).  Subtracting
+    them from temp_size gives the TPU-honest memory estimate the dry-run's
+    fits-in-HBM check uses.  Only converts of entry parameters inside the
+    ENTRY computation are counted (the unambiguous backend artifacts),
+    deduplicated by result name.
+    """
+    from .hlo_graph import split_computations  # local import, no cycle
+    comps, entry = split_computations(hlo_text)
+    if entry is None:
+        return 0
+    seen = set()
+    total = 0
+    for line in comps[entry]:
+        m = _UPCAST_RE.match(line)
+        if m and m.group(1) not in seen:
+            seen.add(m.group(1))
+            total += _nbytes("f32", m.group(2))
+    return total
+
+
+# hardware constants (TPU v5e target)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> dict:
+    """The three per-step roofline terms in seconds (per-device numbers)."""
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s,
+             "hlo_flops_per_dev": flops_per_dev,
+             "hlo_bytes_per_dev": bytes_per_dev,
+             "collective_bytes_per_dev": coll_bytes_per_dev}
+    terms["bound"] = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    terms["step_s"] = max(compute_s, memory_s, collective_s)
+    return terms

@@ -1,0 +1,106 @@
+"""Trip-count-aware collective accounting over compiled HLO text.
+
+``hlo_analysis.collective_stats`` counts each collective op once; ops inside
+a ``while`` body (every lax.scan) execute trip-count times.  This module
+splits the module text into computations, walks the call graph from ENTRY,
+multiplies by while trip counts — taken from XLA's
+``backend_config={"known_trip_count":{"n":"N"}}`` when present, else from
+the loop condition's compare constant — and sums collective operand bytes
+with multiplicity.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import CollectiveStats, parse_collective_line
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_WHILE_REFS = re.compile(r"(body|condition)=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped:
+                m = _COMP_HDR.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    depth = 1
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps, entry
+
+
+def _trip_count(line: str, cond_lines: List[str]) -> int:
+    m = _TRIP.search(line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for ln in cond_lines:
+        for m in _CONST_INT.finditer(ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_stats_trip_aware(hlo: str) -> CollectiveStats:
+    comps, entry = split_computations(hlo)
+    if entry is None:
+        return CollectiveStats({}, {})
+    by = defaultdict(float)
+    cnt = defaultdict(float)
+
+    def walk(name: str, mult: float, seen: tuple):
+        if name not in comps or name in seen:
+            return
+        seen = seen + (name,)
+        for ln in comps[name]:
+            parsed = parse_collective_line(ln)
+            if parsed:
+                base, nbytes = parsed
+                by[base] += nbytes * mult
+                cnt[base] += mult
+            if " while(" in ln:
+                refs = dict(_WHILE_REFS.findall(ln))
+                body, cond = refs.get("body"), refs.get("condition")
+                trip = _trip_count(ln, comps.get(cond, []))
+                if body:
+                    walk(body, mult * trip, seen)
+                continue
+            for ref in _CALLED.findall(ln):
+                if ref in comps:
+                    walk(ref, mult, seen)
+
+    walk(entry, 1.0, ())
+    return CollectiveStats({k: int(v) for k, v in by.items()},
+                          {k: int(v) for k, v in cnt.items()})
+
+
+def while_census(hlo: str) -> List[Tuple[str, int]]:
+    """(body name, trip count) of every while op — remat/unroll debugging."""
+    comps, _ = split_computations(hlo)
+    out = []
+    for name, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                refs = dict(_WHILE_REFS.findall(ln))
+                trip = _trip_count(ln, comps.get(refs.get("condition"), []))
+                out.append((refs.get("body", "?"), trip))
+    return out

@@ -1,0 +1,146 @@
+"""Real local BLAS/LAPACK execution + timing: the 'measured' mode.
+
+The paper times real kernels on Stampede2.  Here, the same role is played by
+jnp kernels executed on the container's CPU and timed with perf_counter —
+real computation with real OS/cache noise, at laptop scale.  A MeasuredTimer
+plugs into the simmpi Runtime in place of the stochastic cost model: compute
+signatures are executed for real; communication signatures (which have no
+local realization) fall back to the cost model.
+
+Inputs are preallocated and cached per signature so that timing measures the
+kernel, not allocation; each invocation blocks until ready.  Matrices are
+re-randomized cheaply between calls only at the level the paper requires
+("each dense input matrix is reset prior to executing a LAPACK routine").
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import cholesky as jsp_cholesky
+from jax.scipy.linalg import solve_triangular
+
+from repro.core.signatures import Signature
+from repro.simmpi.costmodel import CostModel
+
+
+# jit'd kernel implementations, cached by shape automatically by jax
+@jax.jit
+def _gemm(a, b):
+    return a @ b
+
+
+@jax.jit
+def _syrk(a):
+    return a @ a.T
+
+
+@jax.jit
+def _trmm(l, b):
+    return jnp.tril(l) @ b
+
+
+@jax.jit
+def _trsm(l, b):
+    return solve_triangular(l, b, lower=True)
+
+
+@jax.jit
+def _potrf(a):
+    return jsp_cholesky(a, lower=True)
+
+
+@jax.jit
+def _trtri(l):
+    return solve_triangular(l, jnp.eye(l.shape[0], dtype=l.dtype), lower=True)
+
+
+@jax.jit
+def _geqrf(a):
+    return jnp.linalg.qr(a, mode="r")
+
+
+def _spd(rng, n):
+    a = rng.standard_normal((n, n))
+    return np.asarray(a @ a.T + n * np.eye(n), dtype=np.float64)
+
+
+def _tri(rng, n):
+    return np.asarray(np.tril(rng.standard_normal((n, n))) + n * np.eye(n),
+                      dtype=np.float64)
+
+
+class MeasuredTimer:
+    """timer(sig, rng) -> seconds; executes compute kernels for real."""
+
+    def __init__(self, comm_model: Optional[CostModel] = None, seed: int = 0):
+        self.comm_model = comm_model
+        self._cache: Dict[Signature, tuple] = {}
+        self._warmed: set = set()
+        self._rng = np.random.default_rng(seed)
+        self.calls = 0
+
+    def _operands(self, sig: Signature):
+        ops = self._cache.get(sig)
+        if ops is not None:
+            return ops
+        rng = self._rng
+        n, p = sig.name, sig.params
+        if n == "gemm":
+            m, nn, k = int(p[0]), int(p[1]), int(p[2])
+            ops = (_gemm, (jnp.asarray(rng.standard_normal((m, k))),
+                           jnp.asarray(rng.standard_normal((k, nn)))))
+        elif n == "syrk":
+            ops = (_syrk, (jnp.asarray(
+                rng.standard_normal((int(p[0]), int(p[1])))),))
+        elif n == "trmm":
+            ops = (_trmm, (jnp.asarray(_tri(rng, int(p[0]))),
+                           jnp.asarray(rng.standard_normal(
+                               (int(p[0]), int(p[1]))))))
+        elif n == "trsm":
+            ops = (_trsm, (jnp.asarray(_tri(rng, int(p[0]))),
+                           jnp.asarray(rng.standard_normal(
+                               (int(p[0]), int(p[1]))))))
+        elif n == "potrf":
+            ops = (_potrf, (jnp.asarray(_spd(rng, int(p[0]))),))
+        elif n == "trtri":
+            ops = (_trtri, (jnp.asarray(_tri(rng, int(p[0]))),))
+        elif n in ("geqrf", "tpqrt"):
+            m = int(p[0]) if n == "geqrf" else 2 * int(p[1])
+            ops = (_geqrf, (jnp.asarray(
+                rng.standard_normal((max(m, int(p[1])), int(p[1])))),))
+        elif n in ("ormqr", "tpmqrt"):
+            m, k = int(p[0]), int(p[-1])
+            ops = (_gemm, (jnp.asarray(rng.standard_normal((m, k))),
+                           jnp.asarray(rng.standard_normal((k, m)))))
+        elif n == "blk2cyc":
+            nb = max(int(p[0]) // 8, 1)
+            ops = ("copy", (jnp.asarray(rng.standard_normal(nb)),))
+        else:
+            raise KeyError(f"no measured realization for {sig}")
+        self._cache[sig] = ops
+        return ops
+
+    def __call__(self, sig: Signature, rng: np.random.Generator) -> float:
+        if sig.kind == "comm":
+            if self.comm_model is None:
+                raise RuntimeError("measured mode needs a comm cost model")
+            return self.comm_model.sample(sig, rng)
+        fn, args = self._operands(sig)
+        self.calls += 1
+        if fn == "copy":
+            t0 = time.perf_counter()
+            jnp.array(args[0]).block_until_ready()
+            return time.perf_counter() - t0
+        if sig not in self._warmed:
+            # compile outside the timed region on first use
+            fn(*args).block_until_ready()
+            self._warmed.add(sig)
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        return time.perf_counter() - t0

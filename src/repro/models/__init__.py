@@ -1,0 +1,11 @@
+"""models — pure-JAX LM substrate for the 10 assigned architectures.
+
+Scan-over-layers model definitions consuming ``configs.ArchConfig``;
+sharding enters only through ``parallel.sharding.annotate`` logical-axis
+constraints, so the same code serves single-device smoke tests and the
+512-device dry-run.
+"""
+
+from .model import Model, init_params, param_axes
+
+__all__ = ["Model", "init_params", "param_axes"]

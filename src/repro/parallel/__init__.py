@@ -1,0 +1,7 @@
+"""parallel — mesh/sharding rules, pipeline option, gradient compression."""
+
+from .sharding import (ShardingRules, axis_rules, annotate, logical_spec,
+                       current_rules, RULE_VARIANTS, make_rules)
+
+__all__ = ["ShardingRules", "axis_rules", "annotate", "logical_spec",
+           "current_rules", "RULE_VARIANTS", "make_rules"]

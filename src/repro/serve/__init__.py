@@ -1,0 +1,5 @@
+"""serve — KV-cache serving engine (prefill + decode, batched)."""
+
+from .engine import ServeConfig, Engine
+
+__all__ = ["ServeConfig", "Engine"]

@@ -1,0 +1,111 @@
+"""Operations yielded by virtual-rank programs.
+
+Programs are Python generators: ``def program(rank, world): yield <op>``.
+Plain __slots__ classes (not dataclasses) — these sit on the hot path of the
+event loop (hundreds of thousands of instances per simulated configuration).
+"""
+
+from __future__ import annotations
+
+COLL_OPS = (
+    "bcast", "reduce", "allreduce", "allgather", "gather", "scatter",
+    "alltoall", "barrier",
+)
+
+
+class Comp:
+    """A local computation kernel: a routine with a particular input size.
+
+    ``name``/``params`` identify the signature; ``flops`` may be provided
+    explicitly, else it is derived analytically from the signature.
+    """
+
+    __slots__ = ("name", "params", "flops")
+
+    def __init__(self, name, params=(), flops=None):
+        self.name = name
+        self.params = tuple(params)
+        self.flops = flops
+
+    def __repr__(self):
+        return f"Comp({self.name}{self.params})"
+
+
+class Coll:
+    """A blocking collective on a communicator."""
+
+    __slots__ = ("op", "comm", "nbytes", "root")
+
+    def __init__(self, op, comm, nbytes, root=0):
+        self.op = op
+        self.comm = comm
+        self.nbytes = int(nbytes)
+        self.root = root
+
+    def __repr__(self):
+        return f"Coll({self.op}, p={self.comm.size}, {self.nbytes}B)"
+
+
+def Barrier(comm):
+    return Coll("barrier", comm, 0)
+
+
+class Send:
+    """Blocking (rendezvous) point-to-point send."""
+
+    __slots__ = ("dst", "nbytes", "tag")
+
+    def __init__(self, dst, nbytes, tag=0):
+        self.dst = int(dst)
+        self.nbytes = int(nbytes)
+        self.tag = tag
+
+    def __repr__(self):
+        return f"Send(->{self.dst}, {self.nbytes}B, tag={self.tag})"
+
+
+class Recv:
+    """Blocking point-to-point receive (matches Send or Isend)."""
+
+    __slots__ = ("src", "nbytes", "tag")
+
+    def __init__(self, src, nbytes, tag=0):
+        self.src = int(src)
+        self.nbytes = int(nbytes)
+        self.tag = tag
+
+    def __repr__(self):
+        return f"Recv(<-{self.src}, {self.nbytes}B, tag={self.tag})"
+
+
+class Isend:
+    """Nonblocking buffered send: deposits the message (with the sender's
+    path profile snapshot) and completes locally.  Yields a request handle.
+
+    Mirrors Figure 2's MPI_Isend interception: the internal message is sent
+    with PMPI_Bsend so the sender never blocks; the execution decision is
+    made from the sender's local state and travels with the message.
+    """
+
+    __slots__ = ("dst", "nbytes", "tag")
+
+    def __init__(self, dst, nbytes, tag=0):
+        self.dst = int(dst)
+        self.nbytes = int(nbytes)
+        self.tag = tag
+
+    def __repr__(self):
+        return f"Isend(->{self.dst}, {self.nbytes}B, tag={self.tag})"
+
+
+class Wait:
+    """Wait on a request handle returned by Isend (buffered => no-op cost,
+    but the interception point exists, matching Figure 2's MPI_Wait)."""
+
+    __slots__ = ("handle",)
+
+    def __init__(self, handle):
+        self.handle = handle
+
+    def __repr__(self):
+        return f"Wait({self.handle})"

@@ -1,0 +1,251 @@
+"""The discrete-event engine.
+
+Runs one *tuning iteration* (one benchmark execution of one configuration):
+every virtual rank executes its generator program; computation kernels are
+handled inline; communications block until matched; each interception point
+invokes the Critter protocol (core.critter), which advances per-rank clocks
+and path profiles and makes the selective-execution decision.
+
+Matching semantics:
+
+- collectives match by per-communicator arrival index (the k-th collective
+  a rank posts on communicator C completes with every other rank's k-th);
+  a mismatch in op kind or byte count across participants is a schedule bug
+  and raises;
+- blocking Send/Recv are rendezvous; Isend is buffered (deposits a snapshot
+  of the sender's path profile, sender proceeds); Recv matches Send/Isend
+  in post order per (src, dst, tag);
+- Wait on an Isend request is an interception no-op (buffered completion).
+
+If no rank can make progress before all programs finish, DeadlockError
+reports the blocked ranks and what they wait on.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.critter import Critter, IterationReport
+from repro.core.signatures import Signature, comm_sig, comp_sig, p2p_sig
+from .comm import World
+from .ops import Coll, Comp, Isend, Recv, Send, Wait
+
+RUNNABLE, BLOCKED, DONE = 0, 1, 2
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+class RunResult(IterationReport):
+    pass
+
+
+class _CollSite:
+    __slots__ = ("op", "nbytes", "arrived", "needed")
+
+    def __init__(self, op, nbytes, needed):
+        self.op = op
+        self.nbytes = nbytes
+        self.arrived: List[int] = []
+        self.needed = needed
+
+
+class Runtime:
+    """One World + one Critter profiler + a timing source."""
+
+    def __init__(self, world: World, critter: Critter,
+                 timer: Callable[[Signature, np.random.Generator], float],
+                 *, seed: int = 0, overhead: float = 1e-6):
+        self.world = world
+        self.critter = critter
+        self.timer = timer
+        self.overhead = overhead
+        self._rng = np.random.default_rng(seed)
+        self._sig_cache: Dict[tuple, Signature] = {}
+
+    # -- signature interning (hot path) --------------------------------------
+
+    def _comp_sig(self, name, params) -> Signature:
+        key = (0, name, params)
+        s = self._sig_cache.get(key)
+        if s is None:
+            s = comp_sig(name, *params)
+            self._sig_cache[key] = s
+        return s
+
+    def _coll_sig(self, op, comm, nbytes) -> Signature:
+        key = (1, op, comm.size, comm.stride, nbytes)
+        s = self._sig_cache.get(key)
+        if s is None:
+            s = comm_sig(op, nbytes, comm.size, comm.stride)
+            self._sig_cache[key] = s
+        return s
+
+    def _p2p_sig(self, name, nbytes) -> Signature:
+        key = (2, name, nbytes)
+        s = self._sig_cache.get(key)
+        if s is None:
+            s = p2p_sig(name, nbytes)
+            self._sig_cache[key] = s
+        return s
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self, program_factory, *, force_execute: bool = False,
+            update_stats: bool = True) -> RunResult:
+        world = self.world
+        critter = self.critter
+        critter.begin_iteration(force_execute=force_execute,
+                                update_stats=update_stats)
+        rng = self._rng
+        timer = self.timer
+        sampler = lambda sig: timer(sig, rng)  # noqa: E731
+        overhead = self.overhead
+
+        n = world.size
+        gens = [program_factory(r, world) for r in range(n)]
+        status = [RUNNABLE] * n
+        blocked_on = [None] * n
+        # collective sites: (comm.id, site_index) -> _CollSite
+        coll_sites: Dict[Tuple[int, int], _CollSite] = {}
+        coll_counts: Dict[Tuple[int, int], int] = {}
+        # p2p queues: (src, dst, tag) -> deque of entries
+        # send entry: (sender_rank, nbytes, vote, post_clock_or_None)
+        sends: Dict[tuple, deque] = {}
+        recvs: Dict[tuple, deque] = {}
+        next_handle = [0]
+
+        live = n
+
+        def advance(r, value=None):
+            """Run rank r until it blocks or finishes; returns ops handled."""
+            nonlocal live
+            gen = gens[r]
+            while True:
+                try:
+                    op = gen.send(value)
+                except StopIteration:
+                    status[r] = DONE
+                    live -= 1
+                    return
+                value = None
+                cls = op.__class__
+                if cls is Comp:
+                    sig = self._comp_sig(op.name, op.params)
+                    critter.on_comp(r, sig, sampler)
+                    continue
+                if cls is Coll:
+                    comm = op.comm
+                    key = (comm.id, r)
+                    idx = coll_counts.get(key, 0)
+                    coll_counts[key] = idx + 1
+                    skey = (comm.id, idx)
+                    site = coll_sites.get(skey)
+                    if site is None:
+                        site = _CollSite(op.op, op.nbytes, comm.size)
+                        coll_sites[skey] = site
+                    elif site.op != op.op:
+                        raise RuntimeError(
+                            f"collective mismatch on comm {comm.id} site {idx}:"
+                            f" {site.op} vs {op.op} (rank {r})")
+                    site.arrived.append(r)
+                    if len(site.arrived) < site.needed:
+                        status[r] = BLOCKED
+                        blocked_on[r] = op
+                        return
+                    # complete the collective
+                    del coll_sites[skey]
+                    sig = self._coll_sig(op.op, comm, max(site.nbytes, op.nbytes))
+                    critter.on_coll(sig, comm, sampler, overhead)
+                    for rr in site.arrived:
+                        if rr != r:
+                            status[rr] = RUNNABLE
+                            blocked_on[rr] = None
+                    continue
+                if cls is Send:
+                    pkey = (r, op.dst, op.tag)
+                    q = recvs.get(pkey)
+                    if q:
+                        q.popleft()
+                        sig = self._p2p_sig("send", op.nbytes)
+                        vote = critter.p2p_vote(r, sig)
+                        critter.on_p2p(r, op.dst, sig, sampler, vote, overhead)
+                        status[op.dst] = RUNNABLE
+                        blocked_on[op.dst] = None
+                        continue
+                    sends.setdefault(pkey, deque()).append(
+                        (r, op.nbytes, None, None))
+                    status[r] = BLOCKED
+                    blocked_on[r] = op
+                    return
+                if cls is Recv:
+                    pkey = (op.src, r, op.tag)
+                    q = sends.get(pkey)
+                    if q:
+                        src, nbytes, vote, snapshot = q.popleft()
+                        sig = self._p2p_sig("send", nbytes)
+                        if snapshot is None:   # blocking sender, rendezvous
+                            vote = critter.p2p_vote(src, sig)
+                            critter.on_p2p(src, r, sig, sampler, vote,
+                                           overhead)
+                            status[src] = RUNNABLE
+                            blocked_on[src] = None
+                        else:                  # buffered isend
+                            critter.on_isend_match(src, r, sig, sampler,
+                                                   vote, snapshot, overhead)
+                        continue
+                    recvs.setdefault(pkey, deque()).append(r)
+                    status[r] = BLOCKED
+                    blocked_on[r] = op
+                    return
+                if cls is Isend:
+                    sig = self._p2p_sig("send", op.nbytes)
+                    vote = critter.p2p_vote(r, sig)
+                    snapshot = critter.isend_snapshot(r)
+                    pkey = (r, op.dst, op.tag)
+                    q = recvs.get(pkey)
+                    if q:
+                        rcv = q.popleft()
+                        critter.on_isend_match(r, rcv, sig, sampler, vote,
+                                               snapshot, overhead)
+                        status[rcv] = RUNNABLE
+                        blocked_on[rcv] = None
+                    else:
+                        sends.setdefault(pkey, deque()).append(
+                            (r, op.nbytes, vote, snapshot))
+                    next_handle[0] += 1
+                    value = next_handle[0]
+                    continue
+                if cls is Wait:
+                    # buffered isend: completion is free; the interception
+                    # point exists but statistics were updated at match time
+                    continue
+                raise TypeError(f"rank {r} yielded unknown op {op!r}")
+
+        # round-robin scheduling over runnable ranks
+        made_progress = True
+        while live > 0:
+            made_progress = False
+            for r in range(n):
+                if status[r] == RUNNABLE:
+                    made_progress = True
+                    advance(r)
+            if not made_progress:
+                blocked = [(r, blocked_on[r]) for r in range(n)
+                           if status[r] == BLOCKED]
+                if not blocked:
+                    break
+                detail = ", ".join(f"rank {r}: {op!r}"
+                                   for r, op in blocked[:8])
+                raise DeadlockError(
+                    f"{len(blocked)} ranks blocked with no progress: {detail}")
+
+        rep = critter.report()
+        return RunResult(rep.predicted_time, rep.wall_time, rep.crit_comp,
+                         rep.crit_comm, rep.measured_time,
+                         rep.max_measured_comp, rep.executed, rep.skipped,
+                         rep.events)

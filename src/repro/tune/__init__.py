@@ -1,0 +1,22 @@
+"""tune — the paper's approximate-autotuning technique applied to the JAX
+LM framework itself.
+
+Two scales:
+- ``lm_study`` (laptop, measured): step functions of reduced architectures
+  are decomposed into recurring *kernels* (block forward/backward closures
+  with concrete input shapes); ``selective.SelectiveTimer`` applies the
+  paper's confidence-interval machinery to real wall-clock samples, skipping
+  kernels once predictable.  Configurations share kernel signatures, so
+  eager-style model reuse across configurations transfers exactly as in the
+  paper's Capital study.
+- ``dryrun_search`` (production mesh, modeled): configurations are ranked
+  by the three-term roofline of their compiled dry-run — the search loop
+  used for the §Perf hillclimb.
+"""
+
+from .selective import SelectiveTimer, TimerReport
+from .lm_study import LMStudy, lm_config_space
+from .dryrun_search import dryrun_search
+
+__all__ = ["SelectiveTimer", "TimerReport", "LMStudy", "lm_config_space",
+           "dryrun_search"]

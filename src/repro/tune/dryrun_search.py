@@ -1,0 +1,109 @@
+"""Production-scale configuration search over dry-run rooflines.
+
+Enumerates (sharding variant x grad_accum x remat x chunk) points for one
+(arch x shape) cell, lowers each on the production mesh, scores by the
+dominant roofline term, and returns the ranked table.  This is the §Perf
+hillclimb's inner loop — each evaluation is a compile, so the search space
+is kept small and every result is cached to disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.launch.cells import DRYRUN_KNOBS, build_cell, model_flops
+from repro.launch.hlo_analysis import (collective_stats, cpu_upcast_bytes,
+                                       roofline_terms)
+from repro.launch.hlo_graph import collective_stats_trip_aware
+from repro.launch.jaxpr_cost import cost_of
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import ModelKnobs
+from repro.train.step import TrainConfig
+
+
+@dataclass
+class SearchPoint:
+    name: str
+    variant: str = "cp"
+    grad_accum: int = 4
+    remat: str = "full"
+    kv_chunk: int = 512
+    ssm_chunk: int = 256
+    moe_dispatch: str = "a2a"
+    scan_unroll: int = 1
+    accum_dtype: str = "float32"
+
+    def knobs(self) -> ModelKnobs:
+        return replace(DRYRUN_KNOBS, kv_chunk=self.kv_chunk,
+                       ssm_chunk=self.ssm_chunk, remat=self.remat,
+                       moe_dispatch=self.moe_dispatch,
+                       scan_unroll=self.scan_unroll)
+
+    def tc(self) -> TrainConfig:
+        return TrainConfig(grad_accum=self.grad_accum,
+                           accum_dtype=getattr(jnp, self.accum_dtype))
+
+
+def evaluate_point(arch: str, shape: str, pt: SearchPoint, *,
+                   multi_pod: bool = False,
+                   cache_dir: Optional[str] = None) -> Dict:
+    tag = f"{arch}_{shape}_{pt.name}_{'multi' if multi_pod else 'single'}"
+    if cache_dir:
+        path = os.path.join(cache_dir, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape, mesh, variant=pt.variant,
+                      knobs=pt.knobs(), tc=pt.tc())
+    t0 = time.time()
+    compiled = cell.lower().compile()
+    compile_s = time.time() - t0
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    jc = cost_of(cell.fn, *cell.args)
+    coll = collective_stats_trip_aware(hlo)
+    n = mesh.devices.size
+    terms = roofline_terms(jc.flops / n, jc.bytes / n, coll.total_bytes)
+    live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes - cpu_upcast_bytes(hlo))
+    rec = {
+        "tag": tag, "arch": arch, "shape": shape,
+        "point": pt.__dict__, "compile_s": round(compile_s, 1),
+        "roofline": terms,
+        "live_bytes": int(live), "fits": bool(live <= 16 * (1 << 30)),
+        "collective_by_kind": coll.bytes_by_kind,
+    }
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def dryrun_search(arch: str, shape: str, points: Sequence[SearchPoint], *,
+                  multi_pod: bool = False, cache_dir: Optional[str] = None,
+                  require_fit: bool = True) -> List[Dict]:
+    """Evaluate all points, return records sorted by roofline step time
+    (unfitting points sorted last)."""
+    recs = []
+    for pt in points:
+        try:
+            recs.append(evaluate_point(arch, shape, pt,
+                                       multi_pod=multi_pod,
+                                       cache_dir=cache_dir))
+        except Exception as e:  # lowering failures are real search results
+            recs.append({"tag": f"{arch}_{shape}_{pt.name}",
+                         "point": pt.__dict__, "error": repr(e)})
+    def key(r):
+        if "error" in r:
+            return (2, float("inf"))
+        bad = require_fit and not r["fits"]
+        return (1 if bad else 0, r["roofline"]["step_s"])
+    return sorted(recs, key=key)

@@ -1,0 +1,97 @@
+"""Selective wall-clock kernel timing — the paper's §III.A machinery over
+real jitted-closure executions (no virtual machine).
+
+All kernels here are computation kernels (one process, XLA dispatch), so
+the propagation policies collapse to how execution *counts* are used:
+
+- ``conditional``: plain CI, one execution per kernel per iteration;
+- ``local``/``online``: CI shrunk by sqrt(freq) of the kernel's per-step
+  count (identical single-process; kept as separate names for reporting
+  parity with the paper);
+- ``eager``: a kernel switches off permanently (across configurations)
+  the first time its CI meets the tolerance — the cross-configuration
+  model reuse of the paper's Capital study.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.policies import Policy
+from repro.core.signatures import Signature
+from repro.core.stats import KernelStats
+
+
+@dataclass
+class TimerReport:
+    predicted_time: float
+    measured_time: float
+    executed: int
+    skipped: int
+
+
+class SelectiveTimer:
+    """Owns kernel statistics across tuning iterations (one per policy)."""
+
+    def __init__(self, policy: Policy, clock: Callable[[], float] = None):
+        self.policy = policy
+        self.kbar: Dict[Signature, KernelStats] = {}
+        self.global_off: set = set()
+        self.clock = clock or time.perf_counter
+        self._iter_executed: set = set()
+        self._pred = 0.0
+        self._meas = 0.0
+        self._nexec = 0
+        self._nskip = 0
+
+    def reset_models(self):
+        self.kbar.clear()
+        self.global_off.clear()
+
+    def begin_iteration(self):
+        self._iter_executed = set()
+        self._pred = self._meas = 0.0
+        self._nexec = self._nskip = 0
+
+    def _should_execute(self, sig: Signature, freq: int) -> bool:
+        if sig in self.global_off:
+            return False
+        if self.policy.once_per_iteration and sig not in self._iter_executed:
+            return True
+        st = self.kbar.get(sig)
+        if st is None:
+            return True
+        f = freq if self.policy.uses_counts else 1
+        return not st.is_predictable(self.policy.tolerance, f,
+                                     self.policy.min_samples)
+
+    def time_kernel(self, sig: Signature, thunk: Callable[[], None],
+                    freq: int = 1) -> float:
+        """Run (or skip) one kernel occurrence; returns the time charged to
+        the configuration's predicted cost.  ``freq`` is the kernel's
+        occurrence count along the step (the paper's alpha)."""
+        st = self.kbar.get(sig)
+        if st is None:
+            st = self.kbar[sig] = KernelStats()
+        if self._should_execute(sig, freq):
+            t0 = self.clock()
+            thunk()
+            t = self.clock() - t0
+            st.update(t)
+            self._iter_executed.add(sig)
+            self._nexec += 1
+            self._meas += t
+            charged = t
+            if self.policy.persistent_models and st.is_predictable(
+                    self.policy.tolerance, 1, self.policy.min_samples):
+                self.global_off.add(sig)
+        else:
+            charged = st.mean
+            self._nskip += 1
+        self._pred += charged
+        return charged
+
+    def report(self) -> TimerReport:
+        return TimerReport(self._pred, self._meas, self._nexec, self._nskip)

@@ -1,0 +1,13 @@
+"""Test configuration.
+
+The suite includes multi-device tests (sharding, shard_map collectives,
+elastic resharding), so the host platform is split into 8 virtual devices —
+deliberately 8, NOT the dry-run's 512 (production lowering is exercised
+only through launch/dryrun.py, which sets its own flag).  Must run before
+jax initializes a backend.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,70 @@
+"""core.channels: cartesian factorization + aggregate closure."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channels import Channel, ChannelRegistry, ranks_to_channel
+
+
+def test_factorization_roundtrip_grid():
+    # rows/cols/fibers of a 4x4x4 grid all factor and reproduce their ranks
+    for ranks in ([0, 1, 2, 3], [0, 4, 8, 12], [0, 16, 32, 48],
+                  [5, 21, 37, 53], list(range(64))):
+        ch = ranks_to_channel(ranks)
+        assert ch is not None
+        assert ch.ranks() == sorted(ranks)
+
+
+def test_non_cartesian_rejected():
+    assert ranks_to_channel([0, 1, 3]) is None
+    assert ranks_to_channel([0, 1, 2, 4]) is None
+    assert ranks_to_channel([0, 1, 4, 6]) is None
+
+
+@given(st.integers(min_value=0, max_value=37),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=6))
+@settings(max_examples=80, deadline=None)
+def test_factorization_roundtrip_random_strided(offset, stride, size):
+    ranks = [offset + i * stride for i in range(size)]
+    ch = ranks_to_channel(ranks)
+    assert ch is not None
+    assert ch.ranks() == ranks
+    assert ch.size == size
+
+
+def test_hash_offset_independent():
+    a = ranks_to_channel([0, 1, 2, 3])
+    b = ranks_to_channel([8, 9, 10, 11])
+    c = ranks_to_channel([0, 2, 4, 6])
+    assert a.hash_id == b.hash_id
+    assert a.hash_id != c.hash_id
+
+
+def test_aggregate_closure_2d_grid():
+    """Row + column channels of a 4x4 grid combine to cover the world."""
+    reg = ChannelRegistry(16)
+    row = reg.register_ranks([0, 1, 2, 3])          # stride 1, size 4
+    col = reg.register_ranks([0, 4, 8, 12])         # stride 4, size 4
+    assert reg.covers_world({row.hash_id, col.hash_id})
+    assert not reg.covers_world({row.hash_id})
+    assert not reg.covers_world({col.hash_id})
+
+
+def test_aggregate_closure_3d_grid():
+    reg = ChannelRegistry(64)
+    x = reg.register_ranks([0, 1, 2, 3])            # stride 1
+    y = reg.register_ranks([0, 4, 8, 12])           # stride 4
+    z = reg.register_ranks([0, 16, 32, 48])         # stride 16
+    assert not reg.covers_world({x.hash_id, y.hash_id})
+    assert reg.covers_world({x.hash_id, y.hash_id, z.hash_id})
+    # a slice (xy-plane) + the z fiber also covers
+    plane = reg.register_ranks(list(range(16)))
+    assert reg.covers_world({plane.hash_id, z.hash_id})
+
+
+def test_incompatible_channels_do_not_cover():
+    reg = ChannelRegistry(16)
+    a = reg.register_ranks([0, 1, 2, 3])
+    b = reg.register_ranks([0, 2, 4, 6])   # overlapping strides: not disjoint
+    assert not reg.covers_world({a.hash_id, b.hash_id})

@@ -1,0 +1,80 @@
+"""core.stats: Welford estimator + CI machinery (property-based)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.stats import KernelStats, t_quantile_975
+
+finite_floats = st.floats(min_value=1e-6, max_value=1e6,
+                          allow_nan=False, allow_infinity=False)
+
+
+@given(st.lists(finite_floats, min_size=2, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_welford_matches_numpy(xs):
+    ks = KernelStats()
+    for x in xs:
+        ks.update(x)
+    assert ks.n == len(xs)
+    np.testing.assert_allclose(ks.mean, np.mean(xs), rtol=1e-9)
+    np.testing.assert_allclose(ks.variance, np.var(xs, ddof=1),
+                               rtol=1e-6, atol=1e-12)
+    assert ks.min_t == min(xs) and ks.max_t == max(xs)
+
+
+@given(st.lists(finite_floats, min_size=2, max_size=60),
+       st.lists(finite_floats, min_size=2, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_parallel_merge_equals_serial(xs, ys):
+    a = KernelStats()
+    for x in xs:
+        a.update(x)
+    b = KernelStats()
+    for y in ys:
+        b.update(y)
+    a.merge(b)
+    ref = KernelStats()
+    for z in xs + ys:
+        ref.update(z)
+    np.testing.assert_allclose(a.mean, ref.mean, rtol=1e-9)
+    np.testing.assert_allclose(a.variance, ref.variance, rtol=1e-6)
+    assert a.n == ref.n
+
+
+@given(st.lists(finite_floats, min_size=3, max_size=50),
+       st.integers(min_value=2, max_value=64))
+@settings(max_examples=60, deadline=None)
+def test_ci_shrinks_by_sqrt_freq(xs, freq):
+    """The paper's sqrt(alpha) CI reduction from critical-path counts."""
+    ks = KernelStats()
+    for x in xs:
+        ks.update(x)
+    base = ks.ci_halfwidth(1)
+    shrunk = ks.ci_halfwidth(freq)
+    if math.isfinite(base) and base > 0:
+        np.testing.assert_allclose(shrunk, base / math.sqrt(freq),
+                                   rtol=1e-9)
+
+
+def test_predictability_monotone_in_tolerance():
+    ks = KernelStats()
+    rng = np.random.default_rng(0)
+    for x in rng.normal(1.0, 0.05, size=30):
+        ks.update(max(x, 1e-3))
+    tols = [0.001, 0.01, 0.1, 0.5, 1.0]
+    flags = [ks.is_predictable(t) for t in tols]
+    # once predictable at a tolerance, predictable at every larger one
+    assert flags == sorted(flags)
+    assert flags[-1]
+
+
+def test_small_sample_widening():
+    """2-3 samples must not be declared predictable at tight tolerance."""
+    ks = KernelStats()
+    ks.update(1.0)
+    ks.update(1.0001)
+    assert not ks.is_predictable(0.05, min_samples=3)
+    assert t_quantile_975(1) > t_quantile_975(10) > t_quantile_975(1000)

@@ -1,0 +1,102 @@
+"""Serving engine + selective-timer autotuning layers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policies import policy
+from repro.core.signatures import comp_sig
+from repro.models.model import Model, ModelKnobs
+from repro.serve.engine import Engine, Request, ServeConfig
+from repro.tune.selective import SelectiveTimer
+
+KNOBS = ModelKnobs(kv_chunk=16, ssm_chunk=8)
+
+
+def test_engine_matches_manual_greedy():
+    cfg = get_config("smollm-135m", reduced=True)
+    model = Model(cfg, KNOBS)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.arange(7, dtype=np.int32) % cfg.vocab
+    n_new = 5
+
+    # manual greedy decode
+    lg, cache, t0 = model.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                  64, logits_at=jnp.asarray([len(prompt) - 1]))
+    toks = [int(np.argmax(np.asarray(lg)[0]))]
+    t = len(prompt)
+    for _ in range(n_new - 1):
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([t], jnp.int32),
+            {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)})
+        toks.append(int(np.argmax(np.asarray(lg)[0])))
+        t += 1
+
+    eng = Engine(model, params, ServeConfig(batch_size=2, s_max=64,
+                                            max_new_tokens=n_new))
+    eng.submit(Request(0, prompt))
+    res = eng.run()
+    assert res[0].tokens[:n_new] == toks[:n_new]
+
+
+def test_engine_multi_request_slots():
+    cfg = get_config("smollm-135m", reduced=True)
+    model = Model(cfg, KNOBS)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(batch_size=2, s_max=64,
+                                            max_new_tokens=4))
+    for uid in range(5):     # more requests than slots -> queueing
+        eng.submit(Request(uid, np.arange(3 + uid, dtype=np.int32)
+                           % cfg.vocab))
+    res = eng.run()
+    assert len(res) == 5
+    assert all(len(r.tokens) == 4 for r in res.values())
+
+
+def test_selective_timer_skips_when_predictable():
+    calls = {"n": 0}
+    clk = {"t": 0.0}
+
+    def clock():
+        return clk["t"]
+
+    def thunk():
+        calls["n"] += 1
+        clk["t"] += 1.0          # perfectly constant kernel
+
+    timer = SelectiveTimer(policy("local", tolerance=0.2, min_samples=3),
+                           clock=clock)
+    sig = comp_sig("k", 1)
+    for it in range(6):
+        timer.begin_iteration()
+        for _ in range(4):       # freq 4 per iteration
+            timer.time_kernel(sig, thunk, freq=4)
+    # constant timer: after min_samples the CI is ~0 -> later occurrences
+    # skipped; 'local' policy still runs once per iteration
+    assert calls["n"] < 24
+    rep = timer.report()
+    assert rep.skipped == 3 and rep.executed == 1
+
+
+def test_selective_timer_eager_persists_across_configs():
+    clk = {"t": 0.0}
+    calls = {"n": 0}
+
+    def clock():
+        return clk["t"]
+
+    def thunk():
+        calls["n"] += 1
+        clk["t"] += 1.0
+
+    timer = SelectiveTimer(policy("eager", tolerance=0.2, min_samples=3),
+                           clock=clock)
+    sig = comp_sig("shared_kernel", 7)
+    for cfg_idx in range(5):     # 5 "configurations" sharing the kernel
+        timer.begin_iteration()
+        for _ in range(3):
+            timer.time_kernel(sig, thunk)
+    assert sig in timer.global_off
+    assert calls["n"] == 3       # never re-executed after switching off

@@ -1,0 +1,155 @@
+"""simmpi runtime semantics + Critter protocol integration."""
+
+import numpy as np
+import pytest
+
+from repro.core.critter import Critter
+from repro.core.policies import policy
+from repro.simmpi import Coll, Comp, Isend, Recv, Send, Wait
+from repro.simmpi.comm import World
+from repro.simmpi.runtime import DeadlockError, Runtime
+
+
+def const_timer(t=1.0):
+    return lambda sig, rng: t
+
+
+def make_rt(world_size, pol="conditional", tol=0.25, timer=None, seed=0):
+    w = World(world_size)
+    c = Critter(w, policy(pol, tolerance=tol))
+    rt = Runtime(w, c, timer or const_timer(), seed=seed, overhead=0.0)
+    return w, c, rt
+
+
+def test_bulk_synchronous_critical_path():
+    """4 ranks: rank r does r+1 comps then an allreduce; wall time and
+    critical path are determined by the slowest rank."""
+    w, c, rt = make_rt(4)
+
+    def prog(rank, world):
+        for _ in range(rank + 1):
+            yield Comp("gemm", (8, 8, 8))
+        yield Coll("allreduce", world.world_comm, 64)
+
+    res = rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+    # slowest rank: 4 comps (4s) + 1 comm (1s)
+    np.testing.assert_allclose(res.wall_time, 5.0)
+    np.testing.assert_allclose(res.predicted_time, 5.0)
+    np.testing.assert_allclose(res.crit_comp, 4.0)
+    np.testing.assert_allclose(res.crit_comm, 1.0)
+
+
+def test_p2p_rendezvous_clock_sync():
+    w, c, rt = make_rt(2)
+
+    def prog(rank, world):
+        if rank == 0:
+            yield Comp("gemm", (8, 8, 8))   # 1s head start
+            yield Send(1, 128)
+        else:
+            yield Recv(0, 128)
+        yield Comp("gemm", (8, 8, 8))
+
+    res = rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+    # recv completes at max(1, 0) + 1 = 2; both end at 3
+    np.testing.assert_allclose(res.wall_time, 3.0)
+
+
+def test_isend_does_not_block_sender():
+    w, c, rt = make_rt(2)
+
+    def prog(rank, world):
+        if rank == 0:
+            h = yield Isend(1, 64)
+            for _ in range(3):
+                yield Comp("gemm", (8, 8, 8))
+            yield Wait(h)
+        else:
+            yield Comp("gemm", (8, 8, 8))
+            yield Comp("gemm", (8, 8, 8))
+            yield Recv(0, 64)
+
+    res = rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+    # rank0: 3 comps after the isend -> busy until 3.
+    # rank1: 2 comps (2s) + recv of buffered msg (1s) -> 3.
+    np.testing.assert_allclose(res.wall_time, 3.0)
+
+
+def test_collective_mismatch_raises():
+    w, c, rt = make_rt(2)
+
+    def prog(rank, world):
+        if rank == 0:
+            yield Coll("allreduce", world.world_comm, 64)
+        else:
+            yield Coll("bcast", world.world_comm, 64)
+
+    with pytest.raises(RuntimeError, match="mismatch"):
+        rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+
+
+def test_deadlock_detection():
+    w, c, rt = make_rt(2)
+
+    def prog(rank, world):
+        yield Recv(1 - rank, 64)   # both wait forever
+
+    with pytest.raises(DeadlockError):
+        rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+
+
+def test_selective_execution_skips_and_predicts():
+    """With a constant timer, kernels become predictable after min_samples;
+    later iterations skip them and the prediction stays exact."""
+    w, c, rt = make_rt(4, pol="conditional", tol=0.5)
+
+    def prog(rank, world):
+        for _ in range(5):
+            yield Comp("gemm", (16, 16, 16))
+            yield Coll("allreduce", world.world_comm, 256)
+
+    full = rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+    for _ in range(3):
+        res = rt.run(lambda r, w_: prog(r, w_))
+    assert res.skipped > 0
+    np.testing.assert_allclose(res.predicted_time, full.wall_time,
+                               rtol=1e-6)
+    assert res.wall_time < full.wall_time
+
+
+def test_online_counts_reduce_needed_samples():
+    """Noisy timer: the online policy (sqrt(k) shrink from recurring
+    kernels) skips more than conditional at the same tolerance."""
+    def noisy(sig, rng):
+        return float(np.exp(rng.normal(0.0, 0.15)))
+
+    def prog(rank, world):
+        for _ in range(40):
+            yield Comp("gemm", (16, 16, 16))
+        yield Coll("allreduce", world.world_comm, 256)
+
+    skipped = {}
+    for pol in ("conditional", "online"):
+        w, c, rt = make_rt(2, pol=pol, tol=0.2, timer=noisy, seed=3)
+        for _ in range(3):
+            res = rt.run(lambda r, w_: prog(r, w_))
+        skipped[pol] = res.skipped
+    assert skipped["online"] >= skipped["conditional"]
+
+
+def test_eager_switches_off_globally():
+    w, c, rt = make_rt(4, pol="eager", tol=0.9)
+    grids = w.grid_comms((2, 2))
+
+    def prog(rank, world):
+        row = grids.fiber(rank, 0)
+        col = grids.fiber(rank, 1)
+        for _ in range(6):
+            yield Comp("gemm", (16, 16, 16))
+            yield Coll("allreduce", row, 128)
+            yield Coll("allreduce", col, 128)
+
+    for _ in range(4):
+        res = rt.run(lambda r, w_: prog(r, w_))
+    assert len(c.global_off) > 0          # kernels switched off machine-wide
+    assert res.skipped > 0

@@ -1,0 +1,94 @@
+"""Autotuner behaviour on the paper's case studies (CI scale, fast subsets)."""
+
+import numpy as np
+import pytest
+
+from repro.core.policies import policy
+from repro.core.tuner import Autotuner, Configuration, Study
+from repro.linalg import capital_cholesky
+from repro.linalg.studies import capital_cholesky_study
+from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+
+
+def tiny_capital_study(n_configs=4):
+    full = capital_cholesky_study("ci")
+    return Study(name="tiny-capital", world_size=full.world_size,
+                 configs=full.configs[:n_configs],
+                 reset_between_configs=False, machine=full.machine)
+
+
+def test_exhaustive_tuner_speedup_and_optimum():
+    study = tiny_capital_study()
+    tuner = Autotuner(study, policy("eager", tolerance=0.3), trials=3,
+                      seed=0)
+    rep = tuner.tune()
+    assert rep.speedup > 1.5
+    assert rep.optimum_quality >= 0.95
+    assert all(r.rel_error < 0.6 for r in rep.records)
+
+
+def test_error_decreases_with_tolerance():
+    errs = {}
+    for tol in (1.0, 0.05):
+        study = tiny_capital_study()
+        tuner = Autotuner(study, policy("online", tolerance=tol),
+                          trials=3, seed=1)
+        rep = tuner.tune()
+        errs[tol] = rep.mean_error
+    assert errs[0.05] <= errs[1.0] + 0.02
+
+
+def test_apriori_charges_offline_pass():
+    study = tiny_capital_study(2)
+    t_apriori = Autotuner(study, policy("apriori", tolerance=0.3),
+                          trials=2, seed=0).tune()
+    study2 = tiny_capital_study(2)
+    t_cond = Autotuner(study2, policy("conditional", tolerance=0.3),
+                       trials=2, seed=0).tune()
+    # the offline pass is charged to apriori's autotuning time
+    assert t_apriori.selective_tuning_time > \
+        0.9 * t_cond.selective_tuning_time
+
+
+def test_racing_prunes_and_finds_optimum():
+    study = tiny_capital_study()
+    tuner = Autotuner(study, policy("online", tolerance=0.3), trials=1,
+                      seed=0)
+    rep = tuner.tune_racing(max_rounds=6)
+    # racing must not benchmark every config every round
+    assert rep.total_iterations < 6 * len(study.configs)
+    assert rep.best in {c.name for c in study.configs}
+
+
+def test_extrapolate_policy_skips_more():
+    """policy(extrapolate=True) must not lose the optimum and should skip
+    at least as many kernels as the plain policy (CANDMC subset)."""
+    from repro.linalg.studies import candmc_qr_study
+
+    reps = {}
+    for extra in (False, True):
+        full = candmc_qr_study("ci")
+        study = Study(name="candmc-sub", world_size=full.world_size,
+                      configs=full.configs[:3], reset_between_configs=True,
+                      machine=full.machine)
+        rep = Autotuner(study, policy("online", tolerance=0.3,
+                                      extrapolate=extra),
+                        trials=2, seed=0).tune()
+        reps[extra] = rep
+    assert reps[True].optimum_quality >= 0.99
+    sel = {k: r.selective_tuning_time for k, r in reps.items()}
+    assert sel[True] <= sel[False] * 1.05
+
+
+def test_cost_model_allocation_bias_reproducible():
+    cm0 = CostModel(KNL_STAMPEDE2, allocation=0, seed=5)
+    cm0b = CostModel(KNL_STAMPEDE2, allocation=0, seed=5)
+    cm1 = CostModel(KNL_STAMPEDE2, allocation=1, seed=5)
+    from repro.core.signatures import comp_sig
+    sig = comp_sig("gemm", 64, 64, 64)
+    assert cm0._bias_of(sig) == cm0b._bias_of(sig)
+    assert cm0._bias_of(sig) != cm1._bias_of(sig)
+    rng = np.random.default_rng(0)
+    ts = [cm0.sample(sig, rng) for _ in range(50)]
+    assert np.std(ts) > 0          # noise present
+    assert min(ts) > 0
