@@ -61,10 +61,7 @@ def bench_extrapolation(fast=True):
     prog = study.configs[0].make_program(tuner.world)
     for _ in range(2):
         rt.run(prog, force_execute=True, update_stats=True)
-    kbar = {}
-    for st in critter.ranks:
-        for sig, stats in st.kbar.items():
-            kbar.setdefault(sig, stats)
+    kbar = critter.pooled_kbar()
 
     rows = []
     fams = {}

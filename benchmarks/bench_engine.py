@@ -1,0 +1,130 @@
+"""Engine throughput benchmark: events/sec of the discrete-event hot path.
+
+Measures the simulator itself (not the paper's speedup metrics): one full
+execution plus several selective iterations of the SLATE Cholesky study
+program at world sizes 16/64/256, reporting simulated events per wall-clock
+second.  Emits ``BENCH_engine.json`` at the repository root so the perf
+trajectory is tracked from PR 1 onward; ``scripts/check.sh`` gates a quick
+run's warm throughput against the committed baseline (best-of-3 must reach
+CHECK_RATIO, default 50% — coarse because the CI box swings 2-4x).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_engine            # full sweep
+    PYTHONPATH=src python -m benchmarks.bench_engine --quick    # ~10 s sanity
+    PYTHONPATH=src python -m benchmarks.bench_engine --out path.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core.critter import Critter
+from repro.core.policies import policy
+from repro.linalg import slate_cholesky
+from repro.simmpi.comm import World
+from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+from repro.simmpi.runtime import Runtime
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_engine.json")
+
+# world_size -> (pr, pc, n, tile): the ci-scale SLATE Cholesky geometry
+# scaled so per-rank work stays comparable across world sizes.
+GEOMETRIES = {
+    16: (4, 4, 4096, 256),
+    64: (8, 8, 8192, 256),
+    256: (16, 16, 16384, 256),
+}
+
+
+def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
+                selective_iters: int = 6, warmup: int = 2,
+                seed: int = 0) -> dict:
+    """One full (reference) execution followed by ``selective_iters``
+    selective iterations — the tuner's per-configuration pattern.
+
+    Two throughput metrics:
+
+    - ``events_per_sec``       — all iterations, including the cold first
+      run (generator execution, trace recording, full kernel sampling);
+    - ``events_per_sec_warm``  — selective iterations after ``warmup``
+      rounds: the steady-state interception hot path the tuner spends
+      nearly all its time in, and the target of the engine optimization.
+    """
+    pr, pc, n, tile = GEOMETRIES[world_size]
+    world = World(world_size)
+    critter = Critter(world, policy(pol, tolerance=tol))
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed)
+    rt = Runtime(world, critter, cm.sample, seed=seed)
+    prog = slate_cholesky.make_program(world, n=n, tile=tile, lookahead=1,
+                                       pr=pr, pc=pc)
+    runs = []
+    total_events = 0
+    total_wall = 0.0
+    warm_events = 0
+    warm_wall = 0.0
+    for i in range(1 + selective_iters):
+        force = i == 0
+        t0 = time.perf_counter()
+        res = rt.run(prog, force_execute=force)
+        dt = time.perf_counter() - t0
+        runs.append({"force_execute": force, "events": res.events,
+                     "executed": res.executed, "skipped": res.skipped,
+                     "wall_s": round(dt, 4),
+                     "events_per_sec": round(res.events / dt, 1)})
+        total_events += res.events
+        total_wall += dt
+        if i > warmup:
+            warm_events += res.events
+            warm_wall += dt
+    return {
+        "study": "slate-cholesky", "policy": pol, "tolerance": tol,
+        "world_size": world_size, "n": n, "tile": tile, "lookahead": 1,
+        "total_events": total_events, "total_wall_s": round(total_wall, 4),
+        "events_per_sec": round(total_events / total_wall, 1),
+        "events_per_sec_warm": round(warm_events / warm_wall, 1)
+        if warm_wall > 0 else 0.0,
+        "runs": runs,
+    }
+
+
+def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6) -> dict:
+    results = []
+    for ws in world_sizes:
+        r = bench_study(ws, selective_iters=selective_iters)
+        print(f"world={ws:4d}  events={r['total_events']:9d}  "
+              f"wall={r['total_wall_s']:8.3f}s  "
+              f"events/sec={r['events_per_sec']:10.1f}  "
+              f"warm={r['events_per_sec_warm']:10.1f}")
+        results.append(r)
+    return {
+        "meta": {
+            "benchmark": "engine-throughput",
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+        "results": results,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="world 16+64 only, fewer iterations (~10 s)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    if args.quick:
+        out = run(world_sizes=(16, 64), selective_iters=4)
+    else:
+        out = run()
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

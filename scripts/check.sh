@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Smoke check: tier-1 tests + a quick engine-throughput sanity run that
+# fails on a sustained warm-events/sec regression vs the committed
+# BENCH_engine.json.
+#
+# The CI container is multi-tenant and its throughput swings 2-4x between
+# runs, so the gate is deliberately coarse: best-of-3 quick runs at
+# world_size=64 (the acceptance geometry; world 16 is too small to time
+# reliably) must reach CHECK_RATIO (default 0.5) of the committed warm
+# baseline.  A real engine regression (the seed engine is ~7x below the
+# baseline) still fails decisively.
+#
+# Usage:  bash scripts/check.sh [--skip-tests]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" != "--skip-tests" ]]; then
+    echo "== tier-1 tests =="
+    python -m pytest -x -q
+fi
+
+echo "== engine throughput sanity (quick, best of 3) =="
+python - <<'EOF'
+import json
+import os
+import sys
+
+sys.path.insert(0, os.getcwd())
+from benchmarks.bench_engine import bench_study
+
+RATIO = float(os.environ.get("CHECK_RATIO", "0.5"))
+
+with open("BENCH_engine.json") as f:
+    base = {r["world_size"]: r for r in json.load(f)["results"]}
+ref = base[64]["events_per_sec_warm"]
+
+best = 0.0
+for attempt in range(3):
+    r = bench_study(64, selective_iters=4)
+    got = r["events_per_sec_warm"]
+    best = max(best, got)
+    print(f"  attempt {attempt + 1}: warm events/sec {got:12.1f} "
+          f"(baseline {ref:.1f}, ratio {got / ref:.2f})")
+    if best >= RATIO * ref:
+        break
+
+if best < RATIO * ref:
+    print(f"FAIL: best warm throughput {best:.1f} < "
+          f"{RATIO:.0%} of baseline {ref:.1f}")
+    sys.exit(1)
+print(f"OK: best warm throughput {best:.1f} >= {RATIO:.0%} of "
+      f"baseline {ref:.1f}")
+EOF

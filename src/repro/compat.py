@@ -1,0 +1,71 @@
+"""Version compatibility shims for jax.
+
+The repo targets the modern jax sharding API (``jax.sharding.AxisType``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.get_abstract_mesh``),
+but must also run on jax 0.4.x where none of these exist.  Import the
+symbols from here instead of from jax directly:
+
+    from repro.compat import AxisType, make_mesh, get_abstract_mesh
+
+On old jax, ``AxisType`` is a stand-in enum (its values are only ever
+compared for identity/equality), ``make_mesh`` drops the unsupported
+``axis_types`` keyword, and ``get_abstract_mesh`` returns None (callers
+treat "no abstract mesh" as "not inside a manual region").
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # type: ignore
+
+    HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x
+    HAS_AXIS_TYPES = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for jax.sharding.AxisType on old jax: meshes have no
+        axis-type concept there, so every axis behaves as Auto."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, axis_types=None, **kwargs):
+    """jax.make_mesh that tolerates old jax without ``axis_types``."""
+    if HAS_AXIS_TYPES and axis_types is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, **kwargs)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def get_abstract_mesh() -> Optional[object]:
+    """jax.sharding.get_abstract_mesh, or None where it does not exist."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    return fn()
+
+
+# jax.shard_map graduated from jax.experimental in 0.5/0.6, renaming
+# check_rep -> check_vma and replacing `auto` (axes left unsharded by the
+# manual region) with `axis_names` (axes the region is manual over).  Wrap
+# the experimental symbol on 0.4.x so call sites can use the modern API.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None, **kwargs):
+        if axis_names is not None:
+            kwargs["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+        return _shard_map_04(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=check_vma,
+                             **kwargs)

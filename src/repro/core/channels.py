@@ -127,6 +127,10 @@ class ChannelRegistry:
         self.world_size = world_size
         self.channels: Dict[int, Channel] = {}
         self.aggregates: Dict[int, Aggregate] = {}
+        # member-sets of world-spanning aggregates, precomputed so the
+        # covers_world query on the eager hot path is a subset test per
+        # covering set instead of a scan over every aggregate
+        self._world_covers: List[frozenset] = []
         world = Channel(offset=0, dims=((1, world_size),))
         self.world_channel = world
         self.register(world)
@@ -169,6 +173,8 @@ class ChannelRegistry:
                          is_maximal=(channel.size == self.world_size))
         if base.hash_id not in self.aggregates:
             self.aggregates[base.hash_id] = base
+            if base.size == self.world_size:
+                self._world_covers.append(frozenset(base.members))
         frontier = [base]
         while frontier:
             nxt: List[Aggregate] = []
@@ -200,6 +206,8 @@ class ChannelRegistry:
                             if m.size < self.world_size:
                                 m.is_maximal = False
                     self.aggregates[new_hash] = new
+                    if new.size == self.world_size:
+                        self._world_covers.append(frozenset(new.members))
                     nxt.append(new)
             frontier = nxt
 
@@ -209,9 +217,7 @@ class ChannelRegistry:
         """True if some registered aggregate built solely from the given
         channel hashes spans the world communicator — i.e. a kernel whose
         statistics were propagated along these channels is globally agreed."""
-        for agg in self.aggregates.values():
-            if agg.size != self.world_size:
-                continue
-            if set(agg.members) <= channel_hashes:
+        for members in self._world_covers:
+            if members <= channel_hashes:
                 return True
         return False

@@ -18,18 +18,31 @@ runtime at each kernel event:
 The five selective-execution policies of §IV.B are parameterized by
 ``core.policies.Policy``; the aggregate-channel closure used by eager
 propagation lives in ``core.channels``.
+
+Hot-path layout (this refactor — protocol preserved bit-for-bit, see
+``tests/test_golden_reports.py``):
+
+- kernels are addressed by dense interned ids (``core.signatures``), so
+  every per-kernel table is an integer-indexed array/dict instead of
+  hashing a frozen dataclass per event;
+- per-rank scalar state lives in ``core.pathset.EngineState`` NumPy
+  struct-of-arrays, so the internal allreduce at collectives (max-path
+  winner, clock sync, count adoption, vote) and ``report()`` are
+  vectorized reductions over participant index arrays;
+- ``predictable()`` verdicts are memoized inside ``KernelStats`` (n-keyed
+  caches plus freq-monotonicity thresholds) and extrapolator predictions
+  are memoized per sid between refits.
 """
 
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .channels import ChannelRegistry
 from .models import Extrapolator
-from .pathset import RankState
+from .pathset import EngineState
 from .policies import Policy
 from .signatures import Signature
 from .stats import KernelStats
@@ -63,44 +76,53 @@ class IterationReport:
 class Critter:
     """Shared profiler state across tuning iterations.
 
-    One instance per (policy, study); owns the per-rank Critter state, the
-    channel registry (via the World), the eager global switch-off set, and
-    the a-priori critical-path count snapshots.
+    One instance per (policy, study); owns the struct-of-arrays per-rank
+    Critter state, the channel registry (via the World), the eager global
+    switch-off set, and the a-priori critical-path count snapshots.
     """
 
     def __init__(self, world, policy: Policy):
         self.world = world
         self.registry: ChannelRegistry = world.registry
         self.policy = policy
-        self.ranks: List[RankState] = [RankState(r) for r in range(world.size)]
-        # eager propagation: signatures switched off machine-wide, and the
-        # globally-agreed statistics used to predict them
+        self.state = EngineState(world.size)
+        # eager propagation: signature ids switched off machine-wide, and
+        # the globally-agreed statistics used to predict them
         self.global_off: set = set()
-        self.global_stats: Dict[Signature, KernelStats] = {}
-        # apriori: frozen critical-path execution counts from the offline pass
-        self.apriori_counts: Optional[List[Dict[Signature, int]]] = None
+        self.global_stats: Dict[int, KernelStats] = {}
+        # apriori: frozen critical-path execution counts from the offline
+        # pass — a (ranks x sids) snapshot of the freq table
+        self.apriori_counts: Optional[np.ndarray] = None
         # beyond-paper: per-op-family input-size extrapolation (§VIII);
         # fitted from the pooled kernel statistics at iteration start
         self.extrapolator: Optional[Extrapolator] = \
             Extrapolator(max_rel_err=policy.tolerance) \
             if policy.extrapolate else None
+        self._extrap_cache: Dict[int, Optional[Tuple[float, float]]] = {}
         # runtime-facing mode flags (set per run by the tuner/runtime)
         self.force_execute = False
         self.update_stats = True
+        # policy traits, resolved once (hot-path)
+        self._tol = policy.tolerance
+        self._ms = policy.min_samples
+        self._vote_frac = policy.comm_vote_fraction
+        self._eager = policy.name == "eager"
+        self._once = policy.once_per_iteration
+        self._propagates = policy.propagates_counts
+        self._counts_local = policy.name in ("local", "online")
+        self._apriori_mode = policy.name == "apriori"
+        # live id -> Signature list (append-only, shared with the world's
+        # interner — the runtime interns into the same table)
+        self._sigs = world.interner.sigs
 
     # ------------------------------------------------------------------ state
 
     def begin_iteration(self, *, force_execute=False, update_stats=True):
-        for st in self.ranks:
-            st.reset_iteration()
+        self.state.reset_iteration()
         self.force_execute = force_execute
         self.update_stats = update_stats
         if self.extrapolator is not None:
-            pooled: Dict[Signature, KernelStats] = {}
-            for st in self.ranks:
-                for sig, stats in st.kbar.items():
-                    if sig not in pooled:
-                        pooled[sig] = stats
+            pooled = self.pooled_kbar()
             # family models PERSIST across configurations (unlike the
             # per-signature statistics, which the paper's protocol resets):
             # a model fitted on one configuration's kernel sizes predicts
@@ -108,120 +130,222 @@ class Critter:
             # generalization per-signature modeling cannot provide
             if pooled:
                 self.extrapolator.refit(pooled)
+            self._extrap_cache.clear()
+
+    def pooled_kbar(self) -> Dict[Signature, KernelStats]:
+        """First-seen-per-rank pooling of the kernel statistics (used by the
+        extrapolator refit and the beyond-paper benchmarks)."""
+        sigs = self._sigs
+        pooled: Dict[Signature, KernelStats] = {}
+        for d in self.state.kbar:
+            for sid, stats in d.items():
+                sig = sigs[sid]
+                if sig not in pooled:
+                    pooled[sig] = stats
+        return pooled
 
     def snapshot_apriori_counts(self):
         """Freeze the current per-rank critical-path counts (after a full
         offline pass) for immediate use by the 'apriori' policy."""
-        self.apriori_counts = [
-            {sig: info.freq for sig, info in st.ktilde.items() if info.freq}
-            for st in self.ranks]
+        self.apriori_counts = self.state.freq.copy()
+        self.state.skip_ok.fill(False)
 
     def reset_models(self):
         """Paper §VI.A: reset kernel statistics between configurations
         (SLATE/CANDMC studies); eager persists models across configs."""
-        for st in self.ranks:
-            st.reset_models()
+        self.state.reset_models()
         self.global_off = set()
         self.global_stats = {}
         self.apriori_counts = None
 
     # -------------------------------------------------------------- decisions
 
-    def _freq(self, st: RankState, sig: Signature) -> int:
+    def _freq(self, rank: int, sid: int) -> int:
         """The execution count used to shrink the CI (policy-dependent)."""
-        p = self.policy
-        if p.name == "conditional" or p.name == "eager":
-            return 1
-        if p.name == "apriori" and self.apriori_counts is not None:
-            return max(self.apriori_counts[st.rank].get(sig, 0), 1)
-        # local / online: current sub-critical-path running count
-        info = st.ktilde.get(sig)
-        return max(info.freq, 1) if info is not None else 1
+        if self._counts_local:
+            # local / online: current sub-critical-path running count
+            f = int(self.state.freq[rank, sid])
+            return f if f > 1 else 1
+        if self._apriori_mode and self.apriori_counts is not None:
+            ap = self.apriori_counts
+            f = int(ap[rank, sid]) if sid < ap.shape[1] else 0
+            return f if f > 1 else 1
+        # conditional / eager: no execution-count usage
+        return 1
 
-    def _extrapolatable(self, sig: Signature) -> bool:
+    def _extrapolatable(self, sid: int) -> bool:
         """Beyond-paper: a kernel NEVER executed may be skipped when its
         family model's validation error meets the tolerance (§VIII)."""
         if self.extrapolator is None:
             return False
-        pred = self.extrapolator.predict(sig)
-        return pred is not None and pred[1] <= self.policy.tolerance
+        pred = self._extrap_predict(sid)
+        return pred is not None and pred[1] <= self._tol
 
-    def predictable(self, st: RankState, sig: Signature) -> bool:
-        if sig in self.global_off:
+    def _extrap_predict(self, sid: int):
+        """Memoized extrapolator prediction (valid between refits)."""
+        cache = self._extrap_cache
+        if sid in cache:
+            return cache[sid]
+        pred = self.extrapolator.predict(self._sigs[sid])
+        cache[sid] = pred
+        return pred
+
+    def predictable(self, rank: int, sid: int) -> bool:
+        if self.state.skip_ok[rank, sid]:
+            return True      # memoized skip verdict implies predictability
+        if sid in self.global_off:
             return True
-        stats = st.kbar.get(sig)
-        if stats is None or stats.n < self.policy.min_samples:
-            return self._extrapolatable(sig)
-        return stats.is_predictable(self.policy.tolerance,
-                                    self._freq(st, sig),
-                                    self.policy.min_samples)
+        stats = self.state.kbar[rank].get(sid)
+        if stats is None or stats.n < self._ms:
+            return self._extrapolatable(sid)
+        return stats.is_predictable(self._tol, self._freq(rank, sid),
+                                    self._ms)
 
-    def _predicted_mean(self, st: RankState, sig: Signature) -> float:
-        g = self.global_stats.get(sig)
+    def _skip_verdict(self, rank: int, sid: int) -> bool:
+        """The rank-local execute vote, memoized: True means SKIP.
+
+        A skip verdict is cached in ``skip_ok`` only when it holds at
+        critical-path count 1 (``is_predictable(tol, 1, ms)``), which makes
+        the cache immune to count adoption — the relative CI only shrinks
+        as freq grows — so a cached cell stays valid until the (rank, sid)
+        statistics change (cleared at every real execution and at eager
+        aggregation installs) or the iteration ends.
+        """
+        S = self.state
+        if S.skip_ok[rank, sid]:
+            return True
+        if self._once and not S.iter_exec[rank, sid]:
+            # beyond-paper: never-executed kernels with a validated family
+            # model may be skipped outright (§VIII extrapolation)
+            if not (self._never_ran(rank, sid)
+                    and self._extrapolatable(sid)):
+                return False
+        if not self.predictable(rank, sid):
+            return False
+        stats = S.kbar[rank].get(sid)
+        if stats is not None and stats.n > 0 \
+                and stats.is_predictable(self._tol, 1, self._ms):
+            S.skip_ok[rank, sid] = True
+        return True
+
+    def _predicted_mean(self, rank: int, sid: int) -> float:
+        g = self.global_stats.get(sid)
         if g is not None:
             return g.mean
-        stats = st.kbar.get(sig)
-        if stats is not None and stats.n:
-            return stats.mean
+        m = self.state.mean_arr[rank, sid]
+        if m == m:                       # not NaN: stats present with n > 0
+            return float(m)
         if self.extrapolator is not None:
-            pred = self.extrapolator.predict(sig)
+            pred = self._extrap_predict(sid)
             if pred is not None:
                 return pred[0]
         return 0.0
 
-    def _never_ran(self, st: RankState, sig: Signature) -> bool:
-        stats = st.kbar.get(sig)
+    def _never_ran(self, rank: int, sid: int) -> bool:
+        stats = self.state.kbar[rank].get(sid)
         return stats is None or stats.n == 0
 
-    def _should_execute_local(self, st: RankState, sig: Signature) -> bool:
+    def _should_execute_local(self, rank: int, sid: int) -> bool:
         if self.force_execute:
             return True
-        if sig in self.global_off:
+        if sid in self.global_off:
             return False
-        if self.policy.name == "eager":
-            # eager skips only once the kernel is switched off globally
-            # (predictable on some rank AND propagated machine-wide)
+        if self._eager:
+            # eager skips only once the kernel is switched off machine-wide
+            # (predictable on some rank AND propagated globally)
             return True
-        if self.policy.once_per_iteration and sig not in st.iter_executed:
-            # beyond-paper: never-executed kernels with a validated family
-            # model may be skipped outright (§VIII extrapolation)
-            if not (self._never_ran(st, sig) and self._extrapolatable(sig)):
-                return True
-        return not self.predictable(st, sig)
+        return not self._skip_verdict(rank, sid)
 
     # ----------------------------------------------------------- comp kernels
 
-    def on_comp(self, rank: int, sig: Signature, sampler) -> float:
+    def on_comp(self, rank: int, sid: int, sampler) -> float:
         """BLAS/LAPACK interception.  Computation kernel execution decisions
         are made independently per processor (default policy, §III.B).
         Returns the wall-clock time the rank spends (0 when skipped)."""
-        st = self.ranks[rank]
-        path = st.path
-        if self._should_execute_local(st, sig):
-            t = sampler(sig)
+        S = self.state
+        if sid >= S.cap:
+            S.ensure(sid)
+        # fused fast path: memoized skip verdict (or eager global switch-off)
+        if not self.force_execute:
+            if self._eager:
+                skip = S.goff[sid]
+                t = S.gmean[sid] if skip else 0.0
+            else:
+                skip = S.skip_ok[rank, sid]
+                t = S.mean_arr[rank, sid] if skip else 0.0
+            if skip:
+                S.skipped[rank] += 1
+                S.path_exec[rank] += t
+                S.path_comp[rank] += t
+                S.path_kernels[rank] += 1
+                S.freq[rank, sid] += 1
+                S.seen[rank, sid] = True
+                return 0.0
+        if self._should_execute_local(rank, sid):
+            t = sampler(self._sigs[sid])
             if self.update_stats:
-                st.stats(sig).update(t)
-            st.iter_executed.add(sig)
-            st.clock += t
-            st.measured_time += t
-            st.measured_comp += t
-            st.executed_kernels += 1
+                stats = S.stats(rank, sid)
+                stats.update(t)
+                S.mean_arr[rank, sid] = stats.mean
+            S.iter_exec[rank, sid] = True
+            S.clock[rank] += t
+            S.measured_time[rank] += t
+            S.measured_comp[rank] += t
+            S.executed[rank] += 1
             wall = t
         else:
-            t = self._predicted_mean(st, sig)
-            st.skipped_kernels += 1
+            t = self._predicted_mean(rank, sid)
+            S.skipped[rank] += 1
             wall = 0.0
-        path.exec_time += t
-        path.comp_time += t
-        path.kernel_count += 1
-        info = st.info(sig)
-        info.freq += 1
+        S.path_exec[rank] += t
+        S.path_comp[rank] += t
+        S.path_kernels[rank] += 1
+        S.freq[rank, sid] += 1
+        S.seen[rank, sid] = True
+        return wall
+
+    def on_comp_block(self, rank: int, block, sampler) -> float:
+        """A run of consecutive computation kernels of one rank (produced by
+        the runtime's trace compiler).  When every kernel in the run has a
+        memoized skip verdict — the steady state after warmup — the whole
+        run is charged in one vectorized step; otherwise it falls back to
+        per-kernel ``on_comp`` (identical decisions, identical RNG use).
+
+        The predicted times are accumulated sequentially in the same order
+        as individual events, so path metrics stay bit-identical."""
+        S = self.state
+        if block.max_sid >= S.cap:
+            S.ensure(block.max_sid)
+        sids_np = block.sids_np
+        if not self.force_execute:
+            if self._eager:
+                ok = S.goff[sids_np]
+                means = S.gmean[sids_np] if ok.all() else None
+            else:
+                ok = S.skip_ok[rank, sids_np]
+                means = S.mean_arr[rank, sids_np] if ok.all() else None
+            if means is not None:
+                pe = float(S.path_exec[rank])
+                pc = float(S.path_comp[rank])
+                for t in means.tolist():
+                    pe += t
+                    pc += t
+                S.path_exec[rank] = pe
+                S.path_comp[rank] = pc
+                S.path_kernels[rank] += block.n
+                S.skipped[rank] += block.n
+                S.freq[rank, block.uniq] += block.counts
+                S.seen[rank, block.uniq] = True
+                return 0.0
+        wall = 0.0
+        on_comp = self.on_comp
+        for sid in block.sids:
+            wall += on_comp(rank, sid, sampler)
         return wall
 
     # ------------------------------------------------------------ collectives
 
-    def on_coll(self, sig: Signature, comm, sampler,
-                overhead: float = 0.0) -> float:
+    def on_coll(self, sid: int, comm, sampler, overhead: float = 0.0) -> float:
         """Blocking-collective interception (Figure 2, MPI_Bcast et al.).
 
         1. internal PMPI_Allreduce over the channel: max path time wins, the
@@ -236,83 +360,128 @@ class Critter:
 
         Returns the post-completion clock shared by all participants.
         """
+        S = self.state
+        if sid >= S.cap:
+            S.ensure(sid)
         ranks = comm.ranks
-        states = self.ranks
-        policy = self.policy
+        ridx = comm.ranks_np
 
-        # -- internal allreduce: longest path wins ---------------------------
-        winner = None
-        max_path = -1.0
-        max_clock = 0.0
-        for r in ranks:
-            st = states[r]
-            if st.path.exec_time > max_path:
-                max_path = st.path.exec_time
-                winner = st
-            if st.clock > max_clock:
-                max_clock = st.clock
-        for r in ranks:
-            st = states[r]
-            if st is not winner:
-                if policy.propagates_counts:
-                    st.adopt_freqs(winner)
-                st.path.adopt(winner.path)
+        # -- internal allreduce: longest path wins (vectorized) --------------
+        winner = ranks[int(S.path_exec.take(ridx).argmax())]
+        max_clock = float(S.clock.take(ridx).max())
+        if self._propagates:
+            # dominated ranks adopt the winner's critical-path counts for
+            # every kernel the winner has seen, keeping their own otherwise
+            wseen = S.seen[winner]
+            S.freq[ridx] = np.where(wseen, S.freq[winner], S.freq[ridx])
+            S.seen[ridx] |= wseen
+        S.path_exec[ridx] = S.path_exec[winner]
+        S.path_comp[ridx] = S.path_comp[winner]
+        S.path_comm[ridx] = S.path_comm[winner]
+        S.path_kernels[ridx] = S.path_kernels[winner]
 
         # -- execute vote (OR-reduced across the channel) --------------------
         if self.force_execute:
             execute = True
-        elif sig in self.global_off:
+        elif sid in self.global_off:
             execute = False
-        elif policy.name == "eager":
+        elif self._eager:
             execute = True   # until switched off by global propagation
         else:
-            n_pred = 0
-            must = False
-            for r in ranks:
-                st = states[r]
-                if policy.once_per_iteration \
-                        and sig not in st.iter_executed \
-                        and not (self._never_ran(st, sig)
-                                 and self._extrapolatable(sig)):
-                    must = True
-                    break
-                if self.predictable(st, sig):
-                    n_pred += 1
-            execute = must or (n_pred < policy.comm_vote_fraction * len(ranks))
+            execute = self._coll_vote(ranks, ridx, sid)
 
         # -- selective execution + statistics update -------------------------
         max_clock += overhead  # internal-allreduce profiling cost
         if execute:
-            t = sampler(sig)
+            t = sampler(self._sigs[sid])
             new_clock = max_clock + t
-            for r in ranks:
-                st = states[r]
-                if self.update_stats:
-                    st.stats(sig).update(t)
-                st.iter_executed.add(sig)
-                st.clock = new_clock
-                st.measured_time += t
-                st.executed_kernels += 1
-                st.path.exec_time += t
-                st.path.comm_time += t
-                st.path.kernel_count += 1
-                st.info(sig).freq += 1
+            if self.update_stats:
+                mean_col = S.mean_arr
+                for r in ranks:
+                    stats = S.stats(r, sid)
+                    stats.update(t)
+                    mean_col[r, sid] = stats.mean
+                S.skip_ok[ridx, sid] = False    # statistics changed
+            S.iter_exec[ridx, sid] = True
+            S.clock[ridx] = new_clock
+            S.measured_time[ridx] += t
+            S.executed[ridx] += 1
+            S.path_exec[ridx] += t
+            S.path_comm[ridx] += t
         else:
             new_clock = max_clock
-            for r in ranks:
-                st = states[r]
-                t = self._predicted_mean(st, sig)
-                st.clock = new_clock
-                st.skipped_kernels += 1
-                st.path.exec_time += t
-                st.path.comm_time += t
-                st.path.kernel_count += 1
-                st.info(sig).freq += 1
+            tvec = self._predicted_means(ranks, ridx, sid)
+            S.clock[ridx] = new_clock
+            S.skipped[ridx] += 1
+            S.path_exec[ridx] += tvec
+            S.path_comm[ridx] += tvec
+        S.path_kernels[ridx] += 1
+        S.freq[ridx, sid] += 1
+        S.seen[ridx, sid] = True
 
         # -- eager: aggregate_statistics across the channel ------------------
-        if policy.name == "eager" and comm.channel is not None:
+        if self._eager and comm.channel is not None:
             self._aggregate_statistics(comm)
         return new_clock
+
+    def _coll_vote(self, ranks, ridx, sid) -> bool:
+        """OR-reduced execute vote: True when some participant must still
+        execute (once-per-iteration) or too few deem the kernel
+        predictable."""
+        S = self.state
+        if S.skip_ok[ridx, sid].all():
+            return False         # every participant's skip vote is memoized
+        itex = S.iter_exec[ridx, sid]
+        if self._once and not itex.all():
+            if self.extrapolator is None or not self._extrapolatable(sid):
+                return True
+            # never-executed kernels with a validated family model are
+            # exempt from the once-per-iteration re-execution
+            for i, r in enumerate(ranks):
+                if not itex[i] and not self._never_ran(r, sid):
+                    return True
+        # count predictable participants; execute unless enough of the
+        # channel deems the kernel predictable (early exit both ways)
+        thr = self._vote_frac * len(ranks)
+        n_pred = 0
+        left = len(ranks)
+        for r in ranks:
+            left -= 1
+            if self.predictable(r, sid):
+                n_pred += 1
+                if n_pred >= thr:
+                    break
+            elif n_pred + left < thr:
+                return True
+        if n_pred < thr:
+            return True
+        # skip: memoize each participant's vote that holds at count 1 so the
+        # steady state takes the vectorized all() fast path above
+        if self._vote_frac >= 1.0:
+            tol, ms = self._tol, self._ms
+            for r in ranks:
+                stats = S.kbar[r].get(sid)
+                if stats is not None and stats.n > 0 \
+                        and stats.is_predictable(tol, 1, ms):
+                    S.skip_ok[r, sid] = True
+        return False
+
+    def _predicted_means(self, ranks, ridx, sid):
+        """Per-participant predicted mean, vectorized via the mean mirror
+        (scalar when a globally-agreed statistic exists)."""
+        g = self.global_stats.get(sid)
+        if g is not None:
+            return g.mean
+        tvec = self.state.mean_arr[ridx, sid]
+        nan = np.isnan(tvec)
+        if nan.any():
+            fill = 0.0
+            if self.extrapolator is not None:
+                pred = self._extrap_predict(sid)
+                if pred is not None:
+                    fill = pred[0]
+            tvec = np.where(nan, fill, tvec)
+        return tvec
 
     def _aggregate_statistics(self, comm):
         """Figure 2's kernel-aggregation loop at blocking collectives: every
@@ -322,161 +491,190 @@ class Critter:
         in the kernel's propagated set (K[i].agg_channels).  A kernel is
         switched off globally once its propagated channels contain an
         aggregate spanning the world communicator."""
-        states = self.ranks
+        S = self.state
         ranks = comm.ranks
         chash = comm.channel.hash_id
-        tol, ms = self.policy.tolerance, self.policy.min_samples
+        tol, ms = self._tol, self._ms
+        global_off = self.global_off
         # candidate kernels: predictable on >= 1 participant, not yet
         # propagated along this channel everywhere
-        cands = {}
+        cands: List[int] = []
+        candset = set()
         for r in ranks:
-            st = states[r]
-            for sig, stats in st.kbar.items():
-                if sig in self.global_off or sig in cands:
+            agg_r = S.agg_channels[r]
+            for sid, stats in S.kbar[r].items():
+                if sid in global_off or sid in candset:
                     continue
-                info = st.ktilde.get(sig)
-                if info is not None and chash in info.agg_channels:
+                chans = agg_r.get(sid)
+                if chans is not None and chash in chans:
                     continue
                 if stats.is_predictable(tol, 1, ms):
-                    cands[sig] = True
-        for sig in cands:
+                    candset.add(sid)
+                    cands.append(sid)
+        for sid in cands:
             merged = KernelStats()
             for r in ranks:
-                stats = states[r].kbar.get(sig)
+                stats = S.kbar[r].get(sid)
                 if stats is not None:
                     merged.merge(stats)
             covered = False
             for r in ranks:
-                st = states[r]
-                st.kbar[sig] = merged.copy()
-                info = st.info(sig)
-                info.agg_channels.add(chash)
-                info.is_pred = True
+                S.kbar[r][sid] = merged.copy()
+                S.mean_arr[r, sid] = merged.mean
+                S.skip_ok[r, sid] = False       # statistics changed
+                agg_r = S.agg_channels[r]
+                chans = agg_r.get(sid)
+                if chans is None:
+                    chans = agg_r[sid] = set()
+                chans.add(chash)
                 if not covered:
-                    covered = self.registry.covers_world(info.agg_channels)
+                    covered = self.registry.covers_world(chans)
             if covered or comm.size == self.world.size:
-                self.global_off.add(sig)
-                self.global_stats[sig] = merged
+                global_off.add(sid)
+                self.global_stats[sid] = merged
+                S.goff[sid] = True
+                S.gmean[sid] = merged.mean
 
     # ---------------------------------------------------------- point-to-point
 
-    def p2p_vote(self, rank: int, sig: Signature) -> bool:
+    def p2p_vote(self, rank: int, sid: int) -> bool:
         """The sender-or-receiver-local execute vote (int_msg.execute)."""
-        st = self.ranks[rank]
+        S = self.state
+        if sid >= S.cap:
+            S.ensure(sid)
         if self.force_execute:
             return True
-        if sig in self.global_off:
+        if S.skip_ok[rank, sid]:        # memoized skip verdict
             return False
-        if self.policy.once_per_iteration and sig not in st.iter_executed:
-            if not (self._never_ran(st, sig) and self._extrapolatable(sig)):
-                return True
-        return not self.predictable(st, sig)
+        if sid in self.global_off:
+            return False
+        return not self._skip_verdict(rank, sid)
 
-    def on_p2p(self, src: int, dst: int, sig: Signature, sampler,
+    def on_p2p(self, src: int, dst: int, sid: int, sampler,
                src_vote: bool, overhead: float = 0.0) -> float:
         """Complete a matched BLOCKING Send/Recv pair (MPI_Recv interception:
         internal PMPI_Sendrecv of int_msgs, max of the two paths, OR of the
         execute votes).  Both clocks synchronize (rendezvous).
 
         Returns the shared post-completion clock."""
-        states = self.ranks
-        s_st, r_st = states[src], states[dst]
-        execute = src_vote or self.p2p_vote(dst, sig)
+        S = self.state
+        if sid >= S.cap:
+            S.ensure(sid)
+        execute = src_vote or self.p2p_vote(dst, sid)
 
         # longest path wins
-        winner = s_st if s_st.path.exec_time > r_st.path.exec_time else r_st
-        loser = r_st if winner is s_st else s_st
-        if self.policy.propagates_counts:
-            loser.adopt_freqs(winner)
-        loser.path.adopt(winner.path)
+        pe = S.path_exec
+        winner, loser = (src, dst) if pe[src] > pe[dst] else (dst, src)
+        if self._propagates:
+            wseen = S.seen[winner]
+            np.copyto(S.freq[loser], S.freq[winner], where=wseen)
+            S.seen[loser] |= wseen
+        pe[loser] = pe[winner]
+        S.path_comp[loser] = S.path_comp[winner]
+        S.path_comm[loser] = S.path_comm[winner]
+        S.path_kernels[loser] = S.path_kernels[winner]
 
-        base = max(s_st.clock, r_st.clock) + overhead
+        clock = S.clock
+        base = max(clock[src], clock[dst]) + overhead
         if execute:
-            t = sampler(sig)
+            t = sampler(self._sigs[sid])
             done = base + t
-            for st in (s_st, r_st):
+            for r in (src, dst):
                 if self.update_stats:
-                    st.stats(sig).update(t)
-                st.iter_executed.add(sig)
-                st.measured_time += t
-                st.executed_kernels += 1
-                self._charge_comm(st, sig, t)
+                    stats = S.stats(r, sid)
+                    stats.update(t)
+                    S.mean_arr[r, sid] = stats.mean
+                    S.skip_ok[r, sid] = False   # statistics changed
+                S.iter_exec[r, sid] = True
+                S.measured_time[r] += t
+                S.executed[r] += 1
+                self._charge_comm(r, sid, t)
         else:
             done = base
-            for st in (s_st, r_st):
-                st.skipped_kernels += 1
-                self._charge_comm(st, sig, self._predicted_mean(st, sig))
-        s_st.clock = done
-        r_st.clock = done
+            for r in (src, dst):
+                S.skipped[r] += 1
+                self._charge_comm(r, sid, self._predicted_mean(r, sid))
+        clock[src] = done
+        clock[dst] = done
         return done
 
-    def on_isend_match(self, src: int, dst: int, sig: Signature, sampler,
+    def on_isend_match(self, src: int, dst: int, sid: int, sampler,
                        src_vote: bool, snapshot, overhead: float = 0.0):
         """Complete a buffered Isend matched by a Recv (MPI_Recv + MPI_Wait
-        interception).  ``snapshot`` is (path_copy, freqs_copy_or_None,
+        interception).  ``snapshot`` is (path_tuple, freqs_or_None,
         post_clock) captured when the Isend was posted — the internal
         message travels with the SENDER'S PATH AT POST TIME; the sender's
         own state is not rewound (it has moved on), but its statistics ARE
         updated with the completion sample (Figure 2's MPI_Wait update)."""
-        states = self.ranks
-        s_st, r_st = states[src], states[dst]
-        post_path, post_freqs, post_clock = snapshot
-        execute = src_vote or self.p2p_vote(dst, sig)
+        S = self.state
+        if sid >= S.cap:
+            S.ensure(sid)
+        (p_exec, p_comp, p_comm, p_kc), post_freqs, post_clock = snapshot
+        execute = src_vote or self.p2p_vote(dst, sid)
 
         # receiver adopts the deposited path if it dominates
-        if post_path.exec_time > r_st.path.exec_time:
-            if self.policy.propagates_counts and post_freqs is not None:
-                mine = r_st.ktilde
-                for s2, f2 in post_freqs.items():
-                    pi = mine.get(s2)
-                    if pi is None:
-                        pi = r_st.info(s2)
-                    pi.freq = f2
-            r_st.path.adopt(post_path)
+        if p_exec > S.path_exec[dst]:
+            if self._propagates and post_freqs is not None:
+                # post_freqs is the sender's freq row at post time; transfer
+                # the nonzero counts (the row may be shorter than the
+                # current capacity if new signatures appeared since)
+                m = post_freqs.shape[0]
+                mask = post_freqs > 0
+                np.copyto(S.freq[dst, :m], post_freqs, where=mask)
+                S.seen[dst, :m] |= mask
+            S.path_exec[dst] = p_exec
+            S.path_comp[dst] = p_comp
+            S.path_comm[dst] = p_comm
+            S.path_kernels[dst] = p_kc
 
-        base = max(post_clock, r_st.clock) + overhead
+        base = max(post_clock, S.clock[dst]) + overhead
         if execute:
-            t = sampler(sig)
+            t = sampler(self._sigs[sid])
             done = base + t
-            for st in (s_st, r_st):
+            for r in (src, dst):
                 if self.update_stats:
-                    st.stats(sig).update(t)
-                st.iter_executed.add(sig)
-                st.executed_kernels += 1
-            r_st.measured_time += t
-            self._charge_comm(r_st, sig, t)
+                    stats = S.stats(r, sid)
+                    stats.update(t)
+                    S.mean_arr[r, sid] = stats.mean
+                    S.skip_ok[r, sid] = False   # statistics changed
+                S.iter_exec[r, sid] = True
+                S.executed[r] += 1
+            S.measured_time[dst] += t
+            self._charge_comm(dst, sid, t)
         else:
             done = base
-            for st in (s_st, r_st):
-                st.skipped_kernels += 1
-            self._charge_comm(r_st, sig, self._predicted_mean(r_st, sig))
-        r_st.clock = done
+            S.skipped[src] += 1
+            S.skipped[dst] += 1
+            self._charge_comm(dst, sid, self._predicted_mean(dst, sid))
+        S.clock[dst] = done
         return done
 
-    def _charge_comm(self, st: RankState, sig: Signature, t: float):
-        st.path.exec_time += t
-        st.path.comm_time += t
-        st.path.kernel_count += 1
-        st.info(sig).freq += 1
+    def _charge_comm(self, rank: int, sid: int, t: float):
+        S = self.state
+        S.path_exec[rank] += t
+        S.path_comm[rank] += t
+        S.path_kernels[rank] += 1
+        S.freq[rank, sid] += 1
+        S.seen[rank, sid] = True
 
     def isend_snapshot(self, rank: int):
         """Capture the sender-side internal message payload at post time."""
-        st = self.ranks[rank]
-        freqs = None
-        if self.policy.propagates_counts:
-            freqs = {s: i.freq for s, i in st.ktilde.items() if i.freq}
-        return (st.path.copy(), freqs, st.clock)
+        S = self.state
+        # freq-row copy: the seed kept {sig: freq if freq} — transferring
+        # only nonzero counts is deferred to the (rarer) adoption at match
+        freqs = S.freq[rank].copy() if self._propagates else None
+        path = (float(S.path_exec[rank]), float(S.path_comp[rank]),
+                float(S.path_comm[rank]), int(S.path_kernels[rank]))
+        return (path, freqs, float(S.clock[rank]))
 
     # ----------------------------------------------------------------- report
 
     def report(self) -> IterationReport:
-        pred = max(st.path.exec_time for st in self.ranks)
-        wall = max(st.clock for st in self.ranks)
-        comp = max(st.path.comp_time for st in self.ranks)
-        comm = max(st.path.comm_time for st in self.ranks)
-        meas = max(st.measured_time for st in self.ranks)
-        mcomp = max(st.measured_comp for st in self.ranks)
-        ex = sum(st.executed_kernels for st in self.ranks)
-        sk = sum(st.skipped_kernels for st in self.ranks)
-        return IterationReport(pred, wall, comp, comm, meas, mcomp, ex, sk,
-                               ex + sk)
+        S = self.state
+        ex = int(S.executed.sum())
+        sk = int(S.skipped.sum())
+        return IterationReport(
+            float(S.path_exec.max()), float(S.clock.max()),
+            float(S.path_comp.max()), float(S.path_comm.max()),
+            float(S.measured_time.max()), float(S.measured_comp.max()),
+            ex, sk, ex + sk)

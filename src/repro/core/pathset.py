@@ -1,116 +1,152 @@
-"""Per-rank pathsets and kernel sets.
+"""Per-rank pathsets and kernel sets, stored struct-of-arrays.
 
 Each processor owns (paper §III.B):
 
 - ``K-bar``   — performance statistics for each locally-executed kernel;
 - ``K-tilde`` — per-kernel info along its *current sub-critical path*
-                (execution counts/frequencies, predictability flags);
+                (execution counts/frequencies, propagation bookkeeping);
 - pathset ``P`` — the accumulated cost metrics of the rank's current
                 sub-critical path (exec time, and the breakdown into
                 computation / communication time used by the paper's
                 critical-path metrics).
 
-Path-profile quantities (exec/comp/comm time estimates) travel with the
-longest-path adoption protocol; *physical* quantities — the wall-clock the
-rank actually spends under selective execution (``clock``) and the time it
-spends really executing kernels (``measured_*``) — are per-rank and are
-never adopted.
+The seed implementation kept one object per rank holding dict-of-Signature
+tables; this rewrite stores everything as NumPy struct-of-arrays indexed by
+``(rank, signature id)`` (see ``core.signatures.SignatureInterner``), so
+
+- the internal allreduce at collectives (max-path winner, clock sync,
+  critical-path count adoption) is a vectorized reduction over participant
+  index arrays instead of a Python loop over ranks x kernels, and
+- ``report()`` is a handful of array reductions.
+
+Path-profile quantities (``path_*``: exec/comp/comm time estimates) travel
+with the longest-path adoption protocol; *physical* quantities — the
+wall-clock the rank actually spends under selective execution (``clock``)
+and the time it spends really executing kernels (``measured_*``) — are
+per-rank and are never adopted.  K-bar keeps one ``KernelStats`` object per
+(rank, sid) — Welford merge/copy semantics live there — with the sample
+mean mirrored into ``mean_arr`` so skip-path predictions vectorize.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+import math
+from typing import Dict, List, Set
 
-from .signatures import Signature
-from .stats import KernelStats, PathKernelInfo
+import numpy as np
 
-
-class PathProfile:
-    """The pathset P: cost metrics accumulated along the current
-    sub-critical path of one rank.  Adopted wholesale when a communication
-    partner's path dominates (longest-path algorithm)."""
-
-    __slots__ = ("exec_time", "comp_time", "comm_time", "kernel_count")
-
-    def __init__(self, exec_time=0.0, comp_time=0.0, comm_time=0.0,
-                 kernel_count=0):
-        self.exec_time = exec_time
-        self.comp_time = comp_time
-        self.comm_time = comm_time
-        self.kernel_count = kernel_count
-
-    def copy(self) -> "PathProfile":
-        return PathProfile(self.exec_time, self.comp_time, self.comm_time,
-                           self.kernel_count)
-
-    def adopt(self, other: "PathProfile") -> None:
-        self.exec_time = other.exec_time
-        self.comp_time = other.comp_time
-        self.comm_time = other.comm_time
-        self.kernel_count = other.kernel_count
+from .stats import KernelStats
 
 
-class RankState:
-    """All Critter state owned by one virtual rank."""
+class EngineState:
+    """All Critter state for all ranks, struct-of-arrays.
 
-    __slots__ = ("rank", "kbar", "ktilde", "path", "clock",
-                 "measured_time", "measured_comp", "iter_executed",
-                 "executed_kernels", "skipped_kernels")
+    Column capacity grows on demand as new signature ids are interned; rows
+    are fixed at the world size.  ``seen[r, s]`` marks membership of sid
+    ``s`` in rank ``r``'s K-tilde (the seed kept dict keys for this), which
+    the count-adoption protocol needs: a dominated rank adopts the winner's
+    counts only for kernels *the winner has seen*, keeping its own counts
+    for the rest.
+    """
 
-    def __init__(self, rank: int):
-        self.rank = rank
-        self.kbar: Dict[Signature, KernelStats] = {}
-        self.ktilde: Dict[Signature, PathKernelInfo] = {}
-        self.path = PathProfile()
-        # wall-clock the rank actually spends under selective execution: the
-        # discrete-event clock.  path.exec_time is the *estimated*
-        # full-execution time along the rank's current sub-critical path.
-        self.clock = 0.0
-        self.measured_time = 0.0    # time spent really executing kernels
-        self.measured_comp = 0.0    # ... computation portion (Fig 4c/5c)
-        self.iter_executed = set()  # signatures executed this tuning iteration
-        self.executed_kernels = 0
-        self.skipped_kernels = 0
+    __slots__ = ("n_ranks", "cap", "clock", "path_exec", "path_comp",
+                 "path_comm", "path_kernels", "measured_time",
+                 "measured_comp", "executed", "skipped", "freq", "seen",
+                 "iter_exec", "mean_arr", "skip_ok", "goff", "gmean",
+                 "kbar", "agg_channels")
 
-    def stats(self, sig: Signature) -> KernelStats:
-        st = self.kbar.get(sig)
-        if st is None:
-            st = KernelStats()
-            self.kbar[sig] = st
-        return st
+    def __init__(self, n_ranks: int, cap: int = 256):
+        self.n_ranks = n_ranks
+        self.cap = cap
+        # per-rank scalars ---------------------------------------------------
+        self.clock = np.zeros(n_ranks)
+        self.path_exec = np.zeros(n_ranks)
+        self.path_comp = np.zeros(n_ranks)
+        self.path_comm = np.zeros(n_ranks)
+        self.path_kernels = np.zeros(n_ranks, dtype=np.int64)
+        self.measured_time = np.zeros(n_ranks)
+        self.measured_comp = np.zeros(n_ranks)
+        self.executed = np.zeros(n_ranks, dtype=np.int64)
+        self.skipped = np.zeros(n_ranks, dtype=np.int64)
+        # per (rank, sid) ----------------------------------------------------
+        self.freq = np.zeros((n_ranks, cap), dtype=np.int64)
+        self.seen = np.zeros((n_ranks, cap), dtype=bool)
+        self.iter_exec = np.zeros((n_ranks, cap), dtype=bool)
+        # mirror of kbar[r][sid].mean (NaN when absent or n == 0)
+        self.mean_arr = np.full((n_ranks, cap), math.nan)
+        # memoized skip verdicts: True means "this rank's local execute vote
+        # for sid is SKIP, proven at critical-path count 1" — such verdicts
+        # are immune to count adoption (relative CI only shrinks with freq)
+        # and stay valid until the (rank, sid) statistics change or the
+        # iteration ends (see Critter._skip_verdict)
+        self.skip_ok = np.zeros((n_ranks, cap), dtype=bool)
+        # eager global switch-off, array form (mirrors Critter.global_off):
+        # goff[sid] + the globally-agreed mean for switched-off kernels
+        self.goff = np.zeros(cap, dtype=bool)
+        self.gmean = np.full(cap, math.nan)
+        # K-bar: Welford statistics objects, dict-of-int per rank
+        self.kbar: List[Dict[int, KernelStats]] = \
+            [dict() for _ in range(n_ranks)]
+        # K[i].agg_channels: channel hashes a kernel's statistics have been
+        # propagated along (eager), per rank {sid: set-of-hash}
+        self.agg_channels: List[Dict[int, Set[int]]] = \
+            [dict() for _ in range(n_ranks)]
 
-    def info(self, sig: Signature) -> PathKernelInfo:
-        pi = self.ktilde.get(sig)
-        if pi is None:
-            pi = PathKernelInfo()
-            self.ktilde[sig] = pi
-        return pi
+    # -- capacity ------------------------------------------------------------
 
-    def adopt_freqs(self, winner: "RankState") -> None:
-        """Adopt the dominating rank's critical-path kernel frequencies
-        (Figure 2: K[:].freq = int_gmsg.freqs) — 'online' policy only."""
-        mine = self.ktilde
-        for sig, info in winner.ktilde.items():
-            pi = mine.get(sig)
-            if pi is None:
-                pi = PathKernelInfo()
-                mine[sig] = pi
-            pi.freq = info.freq
+    def ensure(self, sid: int) -> None:
+        """Grow column capacity to cover ``sid``."""
+        if sid < self.cap:
+            return
+        new_cap = max(self.cap * 2, sid + 1)
+        pad = new_cap - self.cap
+        self.freq = np.pad(self.freq, ((0, 0), (0, pad)))
+        self.seen = np.pad(self.seen, ((0, 0), (0, pad)))
+        self.iter_exec = np.pad(self.iter_exec, ((0, 0), (0, pad)))
+        self.mean_arr = np.pad(self.mean_arr, ((0, 0), (0, pad)),
+                               constant_values=math.nan)
+        self.skip_ok = np.pad(self.skip_ok, ((0, 0), (0, pad)))
+        self.goff = np.pad(self.goff, (0, pad))
+        self.gmean = np.pad(self.gmean, (0, pad), constant_values=math.nan)
+        self.cap = new_cap
+
+    # -- resets --------------------------------------------------------------
 
     def reset_iteration(self) -> None:
-        """Reset per-iteration path state (start of a configuration run)."""
-        self.path = PathProfile()
-        self.clock = 0.0
-        self.measured_time = 0.0
-        self.measured_comp = 0.0
-        self.iter_executed = set()
-        self.executed_kernels = 0
-        self.skipped_kernels = 0
-        for info in self.ktilde.values():
-            info.freq = 0
+        """Reset per-iteration path state (start of a configuration run);
+        K-tilde membership, statistics and propagation sets persist."""
+        self.clock.fill(0.0)
+        self.path_exec.fill(0.0)
+        self.path_comp.fill(0.0)
+        self.path_comm.fill(0.0)
+        self.path_kernels.fill(0)
+        self.measured_time.fill(0.0)
+        self.measured_comp.fill(0.0)
+        self.executed.fill(0)
+        self.skipped.fill(0)
+        self.freq.fill(0)
+        self.iter_exec.fill(False)
+        self.skip_ok.fill(False)
 
     def reset_models(self) -> None:
         """Forget all kernel statistics (paper: 'we reset the performance
         statistics of all kernels before tuning a new configuration')."""
-        self.kbar = {}
-        self.ktilde = {}
+        for d in self.kbar:
+            d.clear()
+        for d in self.agg_channels:
+            d.clear()
+        self.seen.fill(False)
+        self.freq.fill(0)
+        self.mean_arr.fill(math.nan)
+        self.skip_ok.fill(False)
+        self.goff.fill(False)
+        self.gmean.fill(math.nan)
+
+    # -- K-bar helpers -------------------------------------------------------
+
+    def stats(self, rank: int, sid: int) -> KernelStats:
+        d = self.kbar[rank]
+        st = d.get(sid)
+        if st is None:
+            st = d[sid] = KernelStats()
+        return st

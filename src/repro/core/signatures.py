@@ -10,7 +10,7 @@ communicator, with point-to-point treated as a size-2 sub-communicator.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Dict, List, Tuple
 
 
 @dataclass(frozen=True)
@@ -29,6 +29,59 @@ class Signature:
     def __str__(self) -> str:  # compact, stable, log-friendly
         p = ",".join(str(x) for x in self.params)
         return f"{self.kind}:{self.name}({p})"
+
+
+class SignatureInterner:
+    """Dense-integer interning of Signatures (engine hot path).
+
+    Every Signature observed by the simulator is assigned a small dense id
+    at creation; all per-kernel tables in the Critter engine are indexed by
+    these ids (list/ndarray columns) instead of hashing the frozen
+    dataclass on every event.  Ids are dense per interner and monotonically
+    increasing; ``sigs`` is the live id -> Signature list (append-only, so
+    holders of a reference always see newly interned signatures).  The
+    engine uses one interner per simmpi ``World`` so a study's tables are
+    sized by its own kernel count; the module-level ``INTERNER`` serves
+    standalone uses.
+    """
+
+    __slots__ = ("_ids", "sigs")
+
+    def __init__(self):
+        self._ids: Dict[Signature, int] = {}
+        self.sigs: List[Signature] = []
+
+    def intern(self, sig: Signature) -> int:
+        sid = self._ids.get(sig)
+        if sid is None:
+            sid = len(self.sigs)
+            self._ids[sig] = sid
+            self.sigs.append(sig)
+        return sid
+
+    def sig_of(self, sid: int) -> Signature:
+        return self.sigs[sid]
+
+    def __len__(self) -> int:
+        return len(self.sigs)
+
+
+#: standalone module-level interner for ad-hoc/test use.  NOT the engine's
+#: id space: the simulator interns into ``World.interner``, and ids from
+#: the two namespaces are not interchangeable — never pass an id from one
+#: interner to tables indexed by another.
+INTERNER = SignatureInterner()
+
+
+def intern_sig(sig: Signature) -> int:
+    """Intern ``sig`` in the standalone module-level interner (see the
+    INTERNER note — engine ids come from ``World.interner``)."""
+    return INTERNER.intern(sig)
+
+
+def sig_of(sid: int) -> Signature:
+    """Resolve a standalone-interner id back to its (equal) Signature."""
+    return INTERNER.sigs[sid]
 
 
 def comp_sig(name: str, *params) -> Signature:

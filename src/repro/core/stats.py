@@ -56,6 +56,20 @@ class KernelStats:
     total: float = 0.0
     min_t: float = math.inf
     max_t: float = 0.0
+    # -- engine-hot-path caches (all keyed on n, which strictly increases on
+    # every update/merge, so a stale cache is detected by n alone) ----------
+    # t-quantile x std / sqrt(n) factor, valid while _hw_n == n
+    _hw_n: int = field(default=-1, init=False, repr=False, compare=False)
+    _hw: float = field(default=math.inf, init=False, repr=False, compare=False)
+    # memoized predictability verdicts: relative_ci is monotone nonincreasing
+    # in freq, so one True verdict at freq f certifies every freq >= f and
+    # one False verdict certifies every freq <= f.
+    _pred_n: int = field(default=-1, init=False, repr=False, compare=False)
+    _pred_tol: float = field(default=math.nan, init=False, repr=False,
+                             compare=False)
+    _pred_true: float = field(default=math.inf, init=False, repr=False,
+                              compare=False)
+    _pred_false: int = field(default=0, init=False, repr=False, compare=False)
 
     def update(self, x: float) -> None:
         self.n += 1
@@ -113,8 +127,11 @@ class KernelStats:
         """
         if self.n < 2:
             return math.inf
-        q = t_quantile_975(self.n - 1)
-        hw = q * self.std / math.sqrt(self.n)
+        if self._hw_n != self.n:
+            q = t_quantile_975(self.n - 1)
+            self._hw = q * self.std / math.sqrt(self.n)
+            self._hw_n = self.n
+        hw = self._hw
         if freq > 1:
             hw /= math.sqrt(freq)
         return hw
@@ -130,26 +147,22 @@ class KernelStats:
         """True once relative CI size falls below the confidence tolerance."""
         if self.n < min_samples:
             return False
-        return self.relative_ci(freq) <= tolerance
+        if self._pred_n != self.n or self._pred_tol != tolerance:
+            self._pred_n = self.n
+            self._pred_tol = tolerance
+            self._pred_true = math.inf
+            self._pred_false = 0
+        if freq >= self._pred_true:
+            return True
+        if freq <= self._pred_false:
+            return False
+        ok = self.relative_ci(freq) <= tolerance
+        if ok:
+            self._pred_true = freq
+        else:
+            self._pred_false = freq
+        return ok
 
     def copy(self) -> "KernelStats":
         return KernelStats(self.n, self.mean, self.m2, self.total,
                            self.min_t, self.max_t)
-
-
-@dataclass
-class PathKernelInfo:
-    """Per-signature record in the critical-path kernel set (K-tilde):
-    the execution count (freq) along the current sub-critical path plus the
-    propagation bookkeeping used by the channel/aggregate machinery."""
-
-    freq: int = 0
-    # signature considered predictable by the owning rank (is_pred in Fig. 2)
-    is_pred: bool = False
-    # hashes of aggregate channels this kernel's stats have been propagated
-    # along (Figure 2: K[i].agg_channels); when the registered aggregates
-    # cover the world communicator the kernel can be switched off globally.
-    agg_channels: set = field(default_factory=set)
-
-    def copy(self) -> "PathKernelInfo":
-        return PathKernelInfo(self.freq, self.is_pred, set(self.agg_channels))

@@ -14,13 +14,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.compat import AxisType, make_mesh
 
 
 def make_3d_mesh(c: int) -> Mesh:
     """c x c x c mesh with axes (x, y, z) over c^3 devices."""
-    return jax.make_mesh((c, c, c), ("x", "y", "z"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return make_mesh((c, c, c), ("x", "y", "z"),
+                     axis_types=(AxisType.Auto,) * 3)
 
 
 def matmul_3d(a, b, mesh: Mesh):
@@ -31,7 +34,7 @@ def matmul_3d(a, b, mesh: Mesh):
         c_part = jnp.dot(al, bl, preferred_element_type=jnp.float32)
         return jax.lax.psum(c_part, "z").astype(al.dtype)
 
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = compat.shard_map(body, mesh=mesh,
                        in_specs=(P("x", "z"), P("z", "y")),
                        out_specs=P("x", "y"), check_vma=False)
     return fn(a, b)

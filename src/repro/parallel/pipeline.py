@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from repro.models import layers as ML
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules, axis_rules
@@ -138,7 +140,7 @@ def pipeline_loss(model: Model, rules: ShardingRules, params, batch, *,
         jax.tree.map(lambda a: P(), other),
         jax.tree.map(lambda a: P(), mbs),
     )
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+    fn = compat.shard_map(body, mesh=mesh, in_specs=in_specs,
                        out_specs=P(), check_vma=False,
                        axis_names={"pod"})
     return fn(stage_stacks, other, mbs)

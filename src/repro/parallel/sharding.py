@@ -25,6 +25,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import AxisType, get_abstract_mesh
+
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
 
@@ -226,10 +228,10 @@ def annotate(x, *logical: Optional[str]):
     if rules is None or rules.mesh is None:
         return x
     spec = rules.spec(*logical, dims=x.shape)
-    ctx = jax.sharding.get_abstract_mesh()
+    ctx = get_abstract_mesh()
     try:
         manual = ctx is not None and getattr(ctx, "shape_tuple", ()) and \
-            any(t == jax.sharding.AxisType.Manual
+            any(t == AxisType.Manual
                 for t in getattr(ctx, "axis_types", ()))
     except Exception:
         manual = False

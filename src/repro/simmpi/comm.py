@@ -11,11 +11,14 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.channels import Channel, ChannelRegistry, ranks_to_channel
+from repro.core.signatures import SignatureInterner
 
 
 class Comm:
-    __slots__ = ("id", "ranks", "world", "channel", "_index",
+    __slots__ = ("id", "ranks", "ranks_np", "world", "channel", "_index",
                  "_arrivals", "stride", "size")
 
     _next_id = 0
@@ -25,6 +28,8 @@ class Comm:
         Comm._next_id += 1
         self.world = world
         self.ranks: Tuple[int, ...] = tuple(sorted(int(r) for r in ranks))
+        # participant index array for the engine's vectorized reductions
+        self.ranks_np = np.array(self.ranks, dtype=np.intp)
         self.size = len(self.ranks)
         self._index: Dict[int, int] = {r: i for i, r in enumerate(self.ranks)}
         # channel factorization (None for non-cartesian rank sets)
@@ -60,6 +65,10 @@ class World:
     def __init__(self, size: int):
         self.size = size
         self.registry = ChannelRegistry(size)
+        # world-scoped signature id space: ids stay dense per study, so the
+        # engine's per-(rank, sid) tables are sized by THIS world's kernel
+        # count rather than every signature ever interned in the process
+        self.interner = SignatureInterner()
         self.world_comm = Comm(self, range(size))
         self._comms: Dict[Tuple[int, ...], Comm] = {
             self.world_comm.ranks: self.world_comm}

@@ -88,6 +88,10 @@ class CostModel:
         self.straggler_scale = straggler_scale
         self._bias_seed = (seed * 1_000_003 + allocation * 7919) & 0xFFFFFFFF
         self._bias: Dict[Signature, float] = {}
+        # deterministic-part cache: base_time(sig) * bias(sig) per signature
+        # (both factors are pure in sig), so the per-sample cost is one dict
+        # lookup plus the stochastic draw
+        self._det: Dict[Signature, float] = {}
 
     # -- deterministic part --------------------------------------------------
 
@@ -131,9 +135,12 @@ class CostModel:
         return v
 
     def sample(self, sig: Signature, rng: np.random.Generator) -> float:
+        det = self._det.get(sig)
+        if det is None:
+            det = self.base_time(sig) * self._bias_of(sig)
+            self._det[sig] = det
         sigma = self.comm_noise if sig.kind == "comm" else self.noise
-        t = self.base_time(sig) * self._bias_of(sig) * float(
-            np.exp(rng.normal(0.0, sigma)))
+        t = det * float(np.exp(rng.normal(0.0, sigma)))
         if self.straggler_p > 0 and rng.random() < self.straggler_p:
             t *= 1.0 + rng.random() * self.straggler_scale
         return t

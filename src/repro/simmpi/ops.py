@@ -18,14 +18,20 @@ class Comp:
 
     ``name``/``params`` identify the signature; ``flops`` may be provided
     explicitly, else it is derived analytically from the signature.
+
+    ``sig_id`` is the runtime's interned-signature cache slot: ops live in
+    replayable per-rank traces, so the dense id is resolved once per op
+    instance and reused on every subsequent iteration (see
+    ``simmpi.runtime``).
     """
 
-    __slots__ = ("name", "params", "flops")
+    __slots__ = ("name", "params", "flops", "sig_id")
 
     def __init__(self, name, params=(), flops=None):
         self.name = name
         self.params = tuple(params)
         self.flops = flops
+        self.sig_id = None
 
     def __repr__(self):
         return f"Comp({self.name}{self.params})"
@@ -34,13 +40,14 @@ class Comp:
 class Coll:
     """A blocking collective on a communicator."""
 
-    __slots__ = ("op", "comm", "nbytes", "root")
+    __slots__ = ("op", "comm", "nbytes", "root", "sig_id")
 
     def __init__(self, op, comm, nbytes, root=0):
         self.op = op
         self.comm = comm
         self.nbytes = int(nbytes)
         self.root = root
+        self.sig_id = None
 
     def __repr__(self):
         return f"Coll({self.op}, p={self.comm.size}, {self.nbytes}B)"
@@ -53,12 +60,13 @@ def Barrier(comm):
 class Send:
     """Blocking (rendezvous) point-to-point send."""
 
-    __slots__ = ("dst", "nbytes", "tag")
+    __slots__ = ("dst", "nbytes", "tag", "sig_id")
 
     def __init__(self, dst, nbytes, tag=0):
         self.dst = int(dst)
         self.nbytes = int(nbytes)
         self.tag = tag
+        self.sig_id = None
 
     def __repr__(self):
         return f"Send(->{self.dst}, {self.nbytes}B, tag={self.tag})"
@@ -87,12 +95,13 @@ class Isend:
     made from the sender's local state and travels with the message.
     """
 
-    __slots__ = ("dst", "nbytes", "tag")
+    __slots__ = ("dst", "nbytes", "tag", "sig_id")
 
     def __init__(self, dst, nbytes, tag=0):
         self.dst = int(dst)
         self.nbytes = int(nbytes)
         self.tag = tag
+        self.sig_id = None
 
     def __repr__(self):
         return f"Isend(->{self.dst}, {self.nbytes}B, tag={self.tag})"

@@ -10,7 +10,7 @@ Matching semantics:
 
 - collectives match by per-communicator arrival index (the k-th collective
   a rank posts on communicator C completes with every other rank's k-th);
-  a mismatch in op kind or byte count across participants is a schedule bug
+  a mismatch in op kind OR byte count across participants is a schedule bug
   and raises;
 - blocking Send/Recv are rendezvous; Isend is buffered (deposits a snapshot
   of the sender's path profile, sender proceeds); Recv matches Send/Isend
@@ -19,11 +19,39 @@ Matching semantics:
 
 If no rank can make progress before all programs finish, DeadlockError
 reports the blocked ranks and what they wait on.
+
+Hot-path design (see also core.critter):
+
+- **signature interning**: every op resolves its Signature to a dense
+  integer id once, cached on the op instance (ops are reused via trace
+  replay), so the per-event cost is an attribute read instead of a
+  dataclass hash;
+- **event-program compilation**: rank programs are generators whose op
+  streams do not depend on engine feedback (the only value sent back is
+  the opaque Isend handle, consumed by Wait), and communication matching
+  in this engine is purely structural — independent of sampled times.  The
+  interleaved sequence of Critter interceptions is therefore identical
+  across iterations of one configuration, so the first execution of a
+  program factory records it as a flat event program; subsequent
+  iterations (the common case — the tuner runs trials-many iterations per
+  configuration) execute that program directly, skipping generators,
+  matching queues, and the scheduler entirely.  Runs of consecutive
+  computation kernels of one rank are fused into blocks that the profiler
+  can charge in one vectorized step.  Pass ``trace_cache=False`` for
+  programs whose op stream is nondeterministic or feedback-dependent;
+- **runnable queue**: first-run scheduling pops a (sweep, rank) heap
+  instead of scanning all ranks per pass, preserving the exact round-robin
+  order of the seed engine (a rank unblocked by a lower-ranked completer
+  runs in the same sweep; one unblocked by a higher-ranked completer runs
+  in the next), which keeps sampler RNG consumption — and therefore
+  results — bit-identical.
 """
 
 from __future__ import annotations
 
+import weakref
 from collections import deque
+from heapq import heappop, heappush
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -41,17 +69,60 @@ class DeadlockError(RuntimeError):
 
 
 class RunResult(IterationReport):
-    pass
+
+    @classmethod
+    def from_report(cls, rep: IterationReport) -> "RunResult":
+        return cls(rep.predicted_time, rep.wall_time, rep.crit_comp,
+                   rep.crit_comm, rep.measured_time, rep.max_measured_comp,
+                   rep.executed, rep.skipped, rep.events)
+
+
+class _CompBlock:
+    """A run of consecutive computation events of one rank, fused at event
+    compilation: interned signature ids plus the unique-id/count arrays the
+    profiler's vectorized skip path charges in one step."""
+
+    __slots__ = ("sids", "sids_np", "uniq", "counts", "n", "max_sid")
+
+    def __init__(self, sids: List[int]):
+        self.sids = sids
+        self.sids_np = np.array(sids, dtype=np.intp)
+        self.uniq, self.counts = np.unique(self.sids_np, return_counts=True)
+        self.n = len(sids)
+        self.max_sid = int(self.sids_np.max())
+
+
+# minimum run length worth a vectorized block (below this the fancy-index
+# overhead exceeds the per-op savings)
+_MIN_BLOCK = 4
+
+# event-program opcodes (first element of each event tuple)
+EV_COMP, EV_BLOCK, EV_COLL, EV_P2P, EV_IPOST, EV_IMATCH = range(6)
+
+
+class _EventProgram:
+    """The flat interception sequence of one configuration run.
+
+    events -- list of opcode tuples (see the EV_* constants)
+    n_slots -- number of isend post->match payload slots
+    """
+
+    __slots__ = ("events", "n_slots")
+
+    def __init__(self, events, n_slots):
+        self.events = events
+        self.n_slots = n_slots
 
 
 class _CollSite:
-    __slots__ = ("op", "nbytes", "arrived", "needed")
+    __slots__ = ("op", "nbytes", "arrived", "needed", "sig_id")
 
-    def __init__(self, op, nbytes, needed):
+    def __init__(self, op, nbytes, needed, sig_id):
         self.op = op
         self.nbytes = nbytes
         self.arrived: List[int] = []
         self.needed = needed
+        self.sig_id = sig_id
 
 
 class Runtime:
@@ -59,39 +130,117 @@ class Runtime:
 
     def __init__(self, world: World, critter: Critter,
                  timer: Callable[[Signature, np.random.Generator], float],
-                 *, seed: int = 0, overhead: float = 1e-6):
+                 *, seed: int = 0, overhead: float = 1e-6,
+                 trace_cache: bool = True):
         self.world = world
         self.critter = critter
         self.timer = timer
         self.overhead = overhead
+        self.trace_cache = trace_cache
         self._rng = np.random.default_rng(seed)
-        self._sig_cache: Dict[tuple, Signature] = {}
+        self._intern = world.interner.intern
+        self._sig_cache: Dict[tuple, int] = {}
+        # program_factory -> per-rank recorded op traces (weak: traces die
+        # with the configuration's program factory)
+        self._traces = weakref.WeakKeyDictionary()
 
     # -- signature interning (hot path) --------------------------------------
 
-    def _comp_sig(self, name, params) -> Signature:
+    def _comp_sid(self, name, params) -> int:
         key = (0, name, params)
-        s = self._sig_cache.get(key)
-        if s is None:
-            s = comp_sig(name, *params)
-            self._sig_cache[key] = s
-        return s
+        sid = self._sig_cache.get(key)
+        if sid is None:
+            sid = self._intern(comp_sig(name, *params))
+            self._sig_cache[key] = sid
+        return sid
 
-    def _coll_sig(self, op, comm, nbytes) -> Signature:
+    def _coll_sid(self, op, comm, nbytes) -> int:
         key = (1, op, comm.size, comm.stride, nbytes)
-        s = self._sig_cache.get(key)
-        if s is None:
-            s = comm_sig(op, nbytes, comm.size, comm.stride)
-            self._sig_cache[key] = s
-        return s
+        sid = self._sig_cache.get(key)
+        if sid is None:
+            sid = self._intern(comm_sig(op, nbytes, comm.size, comm.stride))
+            self._sig_cache[key] = sid
+        return sid
 
-    def _p2p_sig(self, name, nbytes) -> Signature:
+    def _p2p_sid(self, name, nbytes) -> int:
         key = (2, name, nbytes)
-        s = self._sig_cache.get(key)
-        if s is None:
-            s = p2p_sig(name, nbytes)
-            self._sig_cache[key] = s
-        return s
+        sid = self._sig_cache.get(key)
+        if sid is None:
+            sid = self._intern(p2p_sig(name, nbytes))
+            self._sig_cache[key] = sid
+        return sid
+
+    # -- event-program compilation --------------------------------------------
+
+    @staticmethod
+    def _compile_events(events) -> _EventProgram:
+        """Fuse runs of consecutive comp events of one rank into blocks.
+
+        Only *globally* consecutive runs are fused — the interleaved order
+        of interceptions across ranks (and therefore sampler RNG
+        consumption) is preserved exactly."""
+        out = []
+        run_rank = -1
+        run: List[int] = []
+        n_slots = 0
+
+        def flush():
+            nonlocal run
+            if len(run) >= _MIN_BLOCK:
+                out.append((EV_BLOCK, run_rank, _CompBlock(run)))
+            else:
+                out.extend((EV_COMP, run_rank, sid) for sid in run)
+            run = []
+
+        for ev in events:
+            if ev[0] == EV_COMP:
+                if ev[1] != run_rank:
+                    if run:
+                        flush()
+                    run_rank = ev[1]
+                run.append(ev[2])
+                continue
+            if run:
+                flush()
+                run_rank = -1
+            if ev[0] == EV_IPOST:
+                n_slots = ev[3] + 1
+            out.append(ev)
+        if run:
+            flush()
+        return _EventProgram(out, n_slots)
+
+    def _run_events(self, prog: _EventProgram, sampler) -> None:
+        """Execute a compiled event program: the scheduler, matching queues
+        and generators are gone; only the interception sequence remains."""
+        critter = self.critter
+        overhead = self.overhead
+        on_comp = critter.on_comp
+        on_comp_block = critter.on_comp_block
+        on_coll = critter.on_coll
+        on_p2p = critter.on_p2p
+        on_isend_match = critter.on_isend_match
+        p2p_vote = critter.p2p_vote
+        isend_snapshot = critter.isend_snapshot
+        slots: List[Optional[tuple]] = [None] * prog.n_slots
+        for ev in prog.events:
+            k = ev[0]
+            if k == EV_COMP:
+                on_comp(ev[1], ev[2], sampler)
+            elif k == EV_IPOST:
+                slots[ev[3]] = (p2p_vote(ev[1], ev[2]),
+                                isend_snapshot(ev[1]))
+            elif k == EV_IMATCH:
+                vote, snapshot = slots[ev[4]]
+                on_isend_match(ev[1], ev[2], ev[3], sampler, vote, snapshot,
+                               overhead)
+            elif k == EV_P2P:
+                on_p2p(ev[1], ev[2], ev[3], sampler,
+                       p2p_vote(ev[1], ev[3]), overhead)
+            elif k == EV_BLOCK:
+                on_comp_block(ev[1], ev[2], sampler)
+            else:
+                on_coll(ev[1], ev[2], sampler, overhead)
 
     # -- main loop ------------------------------------------------------------
 
@@ -107,22 +256,38 @@ class Runtime:
         overhead = self.overhead
 
         n = world.size
+        prog = None
+        if self.trace_cache:
+            try:
+                prog = self._traces.get(program_factory)
+            except TypeError:            # unhashable/unweakrefable factory
+                prog = None
+        if prog is not None:
+            self._run_events(prog, sampler)
+            return RunResult.from_report(critter.report())
+
         gens = [program_factory(r, world) for r in range(n)]
+        recording = self.trace_cache
+        events = [] if recording else None
+        isend_slots = [0]
         status = [RUNNABLE] * n
-        blocked_on = [None] * n
+        blocked_on: List[Optional[object]] = [None] * n
         # collective sites: (comm.id, site_index) -> _CollSite
         coll_sites: Dict[Tuple[int, int], _CollSite] = {}
         coll_counts: Dict[Tuple[int, int], int] = {}
         # p2p queues: (src, dst, tag) -> deque of entries
-        # send entry: (sender_rank, nbytes, vote, post_clock_or_None)
+        # send entry: (sender_rank, sig_id, vote, snapshot_or_None, slot)
         sends: Dict[tuple, deque] = {}
         recvs: Dict[tuple, deque] = {}
         next_handle = [0]
+        # runnable queue: (sweep, rank) min-heap reproducing the seed
+        # engine's sorted round-robin sweeps exactly
+        heap: List[Tuple[int, int]] = [(0, r) for r in range(n)]
 
         live = n
 
-        def advance(r, value=None):
-            """Run rank r until it blocks or finishes; returns ops handled."""
+        def advance(r, sweep, value=None):
+            """Run rank r until it blocks or finishes."""
             nonlocal live
             gen = gens[r]
             while True:
@@ -135,8 +300,12 @@ class Runtime:
                 value = None
                 cls = op.__class__
                 if cls is Comp:
-                    sig = self._comp_sig(op.name, op.params)
-                    critter.on_comp(r, sig, sampler)
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._comp_sid(op.name, op.params)
+                    if recording:
+                        events.append((EV_COMP, r, sid))
+                    critter.on_comp(r, sid, sampler)
                     continue
                 if cls is Coll:
                     comm = op.comm
@@ -146,12 +315,21 @@ class Runtime:
                     skey = (comm.id, idx)
                     site = coll_sites.get(skey)
                     if site is None:
-                        site = _CollSite(op.op, op.nbytes, comm.size)
+                        sid = op.sig_id
+                        if sid is None:
+                            sid = op.sig_id = \
+                                self._coll_sid(op.op, comm, op.nbytes)
+                        site = _CollSite(op.op, op.nbytes, comm.size, sid)
                         coll_sites[skey] = site
                     elif site.op != op.op:
                         raise RuntimeError(
                             f"collective mismatch on comm {comm.id} site {idx}:"
                             f" {site.op} vs {op.op} (rank {r})")
+                    elif site.nbytes != op.nbytes:
+                        raise RuntimeError(
+                            f"collective byte-count mismatch on comm "
+                            f"{comm.id} site {idx} ({site.op}): "
+                            f"{site.nbytes}B vs {op.nbytes}B (rank {r})")
                     site.arrived.append(r)
                     if len(site.arrived) < site.needed:
                         status[r] = BLOCKED
@@ -159,26 +337,37 @@ class Runtime:
                         return
                     # complete the collective
                     del coll_sites[skey]
-                    sig = self._coll_sig(op.op, comm, max(site.nbytes, op.nbytes))
-                    critter.on_coll(sig, comm, sampler, overhead)
+                    if recording:
+                        events.append((EV_COLL, site.sig_id, comm))
+                    critter.on_coll(site.sig_id, comm, sampler, overhead)
                     for rr in site.arrived:
                         if rr != r:
                             status[rr] = RUNNABLE
                             blocked_on[rr] = None
+                            heappush(heap,
+                                     (sweep if rr > r else sweep + 1, rr))
                     continue
                 if cls is Send:
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._p2p_sid("send", op.nbytes)
                     pkey = (r, op.dst, op.tag)
                     q = recvs.get(pkey)
                     if q:
                         q.popleft()
-                        sig = self._p2p_sig("send", op.nbytes)
-                        vote = critter.p2p_vote(r, sig)
-                        critter.on_p2p(r, op.dst, sig, sampler, vote, overhead)
-                        status[op.dst] = RUNNABLE
-                        blocked_on[op.dst] = None
+                        if recording:
+                            events.append((EV_P2P, r, op.dst, sid))
+                        vote = critter.p2p_vote(r, sid)
+                        critter.on_p2p(r, op.dst, sid, sampler, vote,
+                                       overhead)
+                        dst = op.dst
+                        status[dst] = RUNNABLE
+                        blocked_on[dst] = None
+                        heappush(heap,
+                                 (sweep if dst > r else sweep + 1, dst))
                         continue
                     sends.setdefault(pkey, deque()).append(
-                        (r, op.nbytes, None, None))
+                        (r, sid, None, None, 0))
                     status[r] = BLOCKED
                     blocked_on[r] = op
                     return
@@ -186,16 +375,21 @@ class Runtime:
                     pkey = (op.src, r, op.tag)
                     q = sends.get(pkey)
                     if q:
-                        src, nbytes, vote, snapshot = q.popleft()
-                        sig = self._p2p_sig("send", nbytes)
+                        src, sid, vote, snapshot, slot = q.popleft()
                         if snapshot is None:   # blocking sender, rendezvous
-                            vote = critter.p2p_vote(src, sig)
-                            critter.on_p2p(src, r, sig, sampler, vote,
+                            if recording:
+                                events.append((EV_P2P, src, r, sid))
+                            vote = critter.p2p_vote(src, sid)
+                            critter.on_p2p(src, r, sid, sampler, vote,
                                            overhead)
                             status[src] = RUNNABLE
                             blocked_on[src] = None
+                            heappush(heap,
+                                     (sweep if src > r else sweep + 1, src))
                         else:                  # buffered isend
-                            critter.on_isend_match(src, r, sig, sampler,
+                            if recording:
+                                events.append((EV_IMATCH, src, r, sid, slot))
+                            critter.on_isend_match(src, r, sid, sampler,
                                                    vote, snapshot, overhead)
                         continue
                     recvs.setdefault(pkey, deque()).append(r)
@@ -203,20 +397,30 @@ class Runtime:
                     blocked_on[r] = op
                     return
                 if cls is Isend:
-                    sig = self._p2p_sig("send", op.nbytes)
-                    vote = critter.p2p_vote(r, sig)
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._p2p_sid("send", op.nbytes)
+                    slot = isend_slots[0]
+                    isend_slots[0] = slot + 1
+                    if recording:
+                        events.append((EV_IPOST, r, sid, slot))
+                    vote = critter.p2p_vote(r, sid)
                     snapshot = critter.isend_snapshot(r)
                     pkey = (r, op.dst, op.tag)
                     q = recvs.get(pkey)
                     if q:
                         rcv = q.popleft()
-                        critter.on_isend_match(r, rcv, sig, sampler, vote,
+                        if recording:
+                            events.append((EV_IMATCH, r, rcv, sid, slot))
+                        critter.on_isend_match(r, rcv, sid, sampler, vote,
                                                snapshot, overhead)
                         status[rcv] = RUNNABLE
                         blocked_on[rcv] = None
+                        heappush(heap,
+                                 (sweep if rcv > r else sweep + 1, rcv))
                     else:
                         sends.setdefault(pkey, deque()).append(
-                            (r, op.nbytes, vote, snapshot))
+                            (r, sid, vote, snapshot, slot))
                     next_handle[0] += 1
                     value = next_handle[0]
                     continue
@@ -226,26 +430,23 @@ class Runtime:
                     continue
                 raise TypeError(f"rank {r} yielded unknown op {op!r}")
 
-        # round-robin scheduling over runnable ranks
-        made_progress = True
-        while live > 0:
-            made_progress = False
-            for r in range(n):
-                if status[r] == RUNNABLE:
-                    made_progress = True
-                    advance(r)
-            if not made_progress:
-                blocked = [(r, blocked_on[r]) for r in range(n)
-                           if status[r] == BLOCKED]
-                if not blocked:
-                    break
+        while heap:
+            sweep, r = heappop(heap)
+            if status[r] == RUNNABLE:
+                advance(r, sweep)
+        if live > 0:
+            blocked = [(r, blocked_on[r]) for r in range(n)
+                       if status[r] == BLOCKED]
+            if blocked:
                 detail = ", ".join(f"rank {r}: {op!r}"
                                    for r, op in blocked[:8])
                 raise DeadlockError(
-                    f"{len(blocked)} ranks blocked with no progress: {detail}")
+                    f"{len(blocked)} ranks blocked with no progress: "
+                    f"{detail}")
+        elif recording:
+            try:
+                self._traces[program_factory] = self._compile_events(events)
+            except TypeError:
+                pass
 
-        rep = critter.report()
-        return RunResult(rep.predicted_time, rep.wall_time, rep.crit_comp,
-                         rep.crit_comm, rep.measured_time,
-                         rep.max_measured_comp, rep.executed, rep.skipped,
-                         rep.events)
+        return RunResult.from_report(critter.report())

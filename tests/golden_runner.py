@@ -1,0 +1,96 @@
+"""Deterministic golden-report harness for the engine refactor.
+
+Runs the exhaustive-autotune protocol over tiny versions of the three
+op-mix-distinct case studies (SLATE Cholesky: nonblocking p2p; Capital:
+sub-communicator collectives; CANDMC: blocking p2p + collectives) under all
+five selective-execution policies, with a FULLY DETERMINISTIC cost model
+(``bias_sigma=0`` removes the only hash()-dependent term, so results are
+reproducible across processes without pinning PYTHONHASHSEED).
+
+``compute_goldens()`` returns a nested dict of every ConfigRecord field.
+``python -m tests.golden_runner`` (from the repo root, with PYTHONPATH=src)
+regenerates ``tests/golden_reports.json``; the committed file was produced
+by the PRE-refactor seed engine, so ``tests/test_golden_reports.py`` pins
+the optimized engine to bit-identical protocol output.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.policies import POLICIES, policy
+from repro.core.tuner import Autotuner, Configuration, Study
+from repro.linalg import candmc_qr, capital_cholesky, slate_cholesky
+from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden_reports.json")
+
+
+def _studies():
+    slate = Study(
+        name="golden-slate", world_size=16, reset_between_configs=True,
+        configs=[
+            Configuration(
+                name="slate-t64-la1", params={},
+                make_program=lambda w: slate_cholesky.make_program(
+                    w, n=512, tile=64, lookahead=1, pr=4, pc=4)),
+            Configuration(
+                name="slate-t128-la0", params={},
+                make_program=lambda w: slate_cholesky.make_program(
+                    w, n=512, tile=128, lookahead=0, pr=4, pc=4)),
+        ])
+    capital = Study(
+        name="golden-capital", world_size=8, reset_between_configs=False,
+        configs=[
+            Configuration(
+                name="capital-b32-s1", params={},
+                make_program=lambda w: capital_cholesky.make_program(
+                    w, n=256, block=32, strategy=1, grid_c=2)),
+            Configuration(
+                name="capital-b64-s2", params={},
+                make_program=lambda w: capital_cholesky.make_program(
+                    w, n=256, block=64, strategy=2, grid_c=2)),
+        ])
+    candmc = Study(
+        name="golden-candmc", world_size=16, reset_between_configs=True,
+        configs=[
+            Configuration(
+                name="candmc-b16-g4x4", params={},
+                make_program=lambda w: candmc_qr.make_program(
+                    w, m=1024, n=128, block=16, pr=4, pc=4)),
+        ])
+    return (slate, capital, candmc)
+
+
+def compute_goldens() -> dict:
+    out = {}
+    for study in _studies():
+        srec = {}
+        for pol in POLICIES:
+            cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0,
+                           bias_sigma=0.0)
+            tuner = Autotuner(study, policy(pol, tolerance=0.25), trials=2,
+                              seed=0, timer=cm.sample)
+            rep = tuner.tune()
+            srec[pol] = [
+                {"name": r.name, "full_time": r.full_time,
+                 "predicted": r.predicted, "rel_error": r.rel_error,
+                 "comp_error": r.comp_error,
+                 "selective_cost": r.selective_cost,
+                 "full_cost": r.full_cost, "executed": r.executed,
+                 "skipped": r.skipped, "predictions": r.predictions}
+                for r in rep.records]
+        out[study.name] = srec
+    return out
+
+
+def main():
+    goldens = compute_goldens()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(goldens, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

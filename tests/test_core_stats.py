@@ -4,59 +4,74 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                                    # hypothesis is an optional test dep:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # property tests skip, the rest run
+    HAVE_HYPOTHESIS = False
 
 from repro.core.stats import KernelStats, t_quantile_975
 
-finite_floats = st.floats(min_value=1e-6, max_value=1e6,
-                          allow_nan=False, allow_infinity=False)
+if HAVE_HYPOTHESIS:
+    finite_floats = st.floats(min_value=1e-6, max_value=1e6,
+                              allow_nan=False, allow_infinity=False)
 
+    @given(st.lists(finite_floats, min_size=2, max_size=200))
+    @settings(max_examples=100, deadline=None)
+    def test_welford_matches_numpy(xs):
+        ks = KernelStats()
+        for x in xs:
+            ks.update(x)
+        assert ks.n == len(xs)
+        np.testing.assert_allclose(ks.mean, np.mean(xs), rtol=1e-9)
+        np.testing.assert_allclose(ks.variance, np.var(xs, ddof=1),
+                                   rtol=1e-6, atol=1e-12)
+        assert ks.min_t == min(xs) and ks.max_t == max(xs)
 
-@given(st.lists(finite_floats, min_size=2, max_size=200))
-@settings(max_examples=100, deadline=None)
-def test_welford_matches_numpy(xs):
-    ks = KernelStats()
-    for x in xs:
-        ks.update(x)
-    assert ks.n == len(xs)
-    np.testing.assert_allclose(ks.mean, np.mean(xs), rtol=1e-9)
-    np.testing.assert_allclose(ks.variance, np.var(xs, ddof=1),
-                               rtol=1e-6, atol=1e-12)
-    assert ks.min_t == min(xs) and ks.max_t == max(xs)
+    @given(st.lists(finite_floats, min_size=2, max_size=60),
+           st.lists(finite_floats, min_size=2, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_parallel_merge_equals_serial(xs, ys):
+        a = KernelStats()
+        for x in xs:
+            a.update(x)
+        b = KernelStats()
+        for y in ys:
+            b.update(y)
+        a.merge(b)
+        ref = KernelStats()
+        for z in xs + ys:
+            ref.update(z)
+        np.testing.assert_allclose(a.mean, ref.mean, rtol=1e-9)
+        np.testing.assert_allclose(a.variance, ref.variance, rtol=1e-6)
+        assert a.n == ref.n
 
+    @given(st.lists(finite_floats, min_size=3, max_size=50),
+           st.integers(min_value=2, max_value=64))
+    @settings(max_examples=60, deadline=None)
+    def test_ci_shrinks_by_sqrt_freq(xs, freq):
+        """The paper's sqrt(alpha) CI reduction from critical-path counts."""
+        ks = KernelStats()
+        for x in xs:
+            ks.update(x)
+        base = ks.ci_halfwidth(1)
+        shrunk = ks.ci_halfwidth(freq)
+        if math.isfinite(base) and base > 0:
+            np.testing.assert_allclose(shrunk, base / math.sqrt(freq),
+                                       rtol=1e-9)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_welford_matches_numpy():
+        pass
 
-@given(st.lists(finite_floats, min_size=2, max_size=60),
-       st.lists(finite_floats, min_size=2, max_size=60))
-@settings(max_examples=60, deadline=None)
-def test_parallel_merge_equals_serial(xs, ys):
-    a = KernelStats()
-    for x in xs:
-        a.update(x)
-    b = KernelStats()
-    for y in ys:
-        b.update(y)
-    a.merge(b)
-    ref = KernelStats()
-    for z in xs + ys:
-        ref.update(z)
-    np.testing.assert_allclose(a.mean, ref.mean, rtol=1e-9)
-    np.testing.assert_allclose(a.variance, ref.variance, rtol=1e-6)
-    assert a.n == ref.n
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_parallel_merge_equals_serial():
+        pass
 
-
-@given(st.lists(finite_floats, min_size=3, max_size=50),
-       st.integers(min_value=2, max_value=64))
-@settings(max_examples=60, deadline=None)
-def test_ci_shrinks_by_sqrt_freq(xs, freq):
-    """The paper's sqrt(alpha) CI reduction from critical-path counts."""
-    ks = KernelStats()
-    for x in xs:
-        ks.update(x)
-    base = ks.ci_halfwidth(1)
-    shrunk = ks.ci_halfwidth(freq)
-    if math.isfinite(base) and base > 0:
-        np.testing.assert_allclose(shrunk, base / math.sqrt(freq),
-                                   rtol=1e-9)
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_ci_shrinks_by_sqrt_freq():
+        pass
 
 
 def test_predictability_monotone_in_tolerance():

@@ -88,6 +88,18 @@ def test_collective_mismatch_raises():
         rt.run(lambda r, w_: prog(r, w_), force_execute=True)
 
 
+def test_collective_byte_count_mismatch_raises():
+    """The docstring contract: participants posting different byte counts
+    at the same collective site is a schedule bug and raises."""
+    w, c, rt = make_rt(2)
+
+    def prog(rank, world):
+        yield Coll("allreduce", world.world_comm, 64 if rank == 0 else 128)
+
+    with pytest.raises(RuntimeError, match="byte-count mismatch"):
+        rt.run(lambda r, w_: prog(r, w_), force_execute=True)
+
+
 def test_deadlock_detection():
     w, c, rt = make_rt(2)
 
