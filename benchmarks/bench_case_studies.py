@@ -25,7 +25,7 @@ COLS = ("study", "policy", "tolerance", "speedup", "mean_error",
         "mean_comp_error", "optimum_quality")
 
 
-def run(fast: bool = True, studies=None, policies=None):
+def run(fast: bool = True, studies=None, policies=None, workers: int = 1):
     eps = EPS_FAST if fast else EPS_FULL
     studies = studies or list(STUDIES)
     policies = policies or ("conditional", "local", "online", "apriori",
@@ -33,7 +33,7 @@ def run(fast: bool = True, studies=None, policies=None):
     all_rows = []
     for name in studies:
         rows = sweep_study(STUDIES[name], eps=eps, policies=policies,
-                           trials=3 if fast else 5)
+                           trials=3 if fast else 5, workers=workers)
         all_rows.extend(rows)
         print(f"\n== {name} (CI scale) ==")
         print(fmt_table(rows, COLS))
@@ -91,8 +91,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--studies", nargs="*", default=None)
+    ap.add_argument("--workers", type=int, default=1)
     args = ap.parse_args()
-    run(fast=not args.full, studies=args.studies)
+    run(fast=not args.full, studies=args.studies, workers=args.workers)
 
 
 if __name__ == "__main__":

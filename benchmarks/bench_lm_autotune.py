@@ -10,13 +10,9 @@ configuration matches the full-execution optimum.
 from __future__ import annotations
 
 import argparse
-import time
-from collections import defaultdict
 
-import numpy as np
-
-from repro.core.policies import policy
-from repro.tune import LMStudy, SelectiveTimer, lm_config_space
+from repro.api import AutotuneSession, WallClockBackend
+from repro.tune import LMStudy
 
 from .common import fmt_table, save_rows
 
@@ -24,33 +20,21 @@ from .common import fmt_table, save_rows
 def run_arch(arch: str, *, policies=("conditional", "local", "eager"),
              eps=(0.5, 0.25, 0.1), iters=3, max_configs=8, seed=0):
     study = LMStudy(arch, batch=2, seq=32, seed=seed)
-    space = lm_config_space(study.cfg)[:max_configs]
+    session = AutotuneSession(study.search_space(max_configs),
+                              backend=WallClockBackend(study.kernels_of),
+                              trials=iters, min_samples=3)
+    # wall-clock measurements stay serial: forked workers would contend
+    # for the CPU and corrupt each other's timings
+    results = session.sweep(policies=list(policies), tolerances=list(eps))
     rows = []
-    for pol in policies:
-        for e in eps:
-            timer = SelectiveTimer(policy(pol, tolerance=e, min_samples=3))
-            full_time = 0.0
-            sel_time = 0.0
-            preds, fulls = [], []
-            for kn in space:
-                if not timer.policy.persistent_models:
-                    timer.reset_models()
-                pred, full, cost = study.run_config(kn, timer, iters=iters)
-                preds.append(pred)
-                fulls.append(full)
-                full_time += full * iters
-                sel_time += cost
-            errs = [abs(p - f) / f for p, f in zip(preds, fulls)]
-            best_pred = int(np.argmin(preds))
-            best_full = int(np.argmin(fulls))
-            rows.append({
-                "arch": arch, "policy": pol, "tolerance": e,
-                "speedup": full_time / max(sel_time, 1e-12),
-                "mean_error": float(np.mean(errs)),
-                "optimum_match": space[best_pred].name
-                == space[best_full].name,
-                "chosen": space[best_pred].name,
-            })
+    for r in results:
+        rows.append({
+            "arch": arch, "policy": r.policy, "tolerance": r.tolerance,
+            "speedup": r.speedup,
+            "mean_error": r.mean_error,
+            "optimum_match": r.chosen.name == r.true_best.name,
+            "chosen": r.chosen.name,
+        })
     return rows
 
 

@@ -1,0 +1,67 @@
+"""Paper-scale reproduction (Figs 4-5 protocol) at REAL processor counts.
+
+Unlike ``bench_case_studies`` (CI scale: 64 ranks, reduced matrices), this
+runs the §V.C configuration spaces on the actual virtual-machine
+geometries — Capital Cholesky on 512 ranks, SLATE Cholesky on 1024,
+CANDMC QR on 4096, SLATE QR on 256 — through the session API:
+process-parallel across sweep points and checkpointed to
+``results/paper_sweep_checkpoint.json`` so a long run survives
+interruption and re-invocation only pays for missing points.
+
+A full five-policy, six-tolerance grid over all four studies is hours of
+CPU; the default grid is therefore the bounded subset recorded in
+``results/paper_case_studies.json`` (Capital at two policies x two
+tolerances — the study whose eager-vs-conditional contrast is the paper's
+headline Fig 5 claim), and ``--studies/--policies/--eps`` widen it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from repro.linalg.studies import STUDIES
+
+from .common import ART, fmt_table, save_rows, sweep_study
+
+COLS = ("study", "policy", "tolerance", "speedup", "mean_error",
+        "mean_comp_error", "optimum_quality", "bench_wall_s")
+
+DEFAULT_STUDIES = ("capital-cholesky",)
+DEFAULT_POLICIES = ("conditional", "eager")
+DEFAULT_EPS = (0.25, 0.0625)
+
+
+def run(studies=DEFAULT_STUDIES, policies=DEFAULT_POLICIES,
+        eps=DEFAULT_EPS, trials: int = 3, workers: int = 0):
+    all_rows = []
+    for name in studies:
+        ck = os.path.join(ART, "paper_sweep_checkpoint.json")
+        rows = sweep_study(STUDIES[name], eps=eps, policies=policies,
+                           trials=trials, scale="paper", workers=workers,
+                           checkpoint=ck)
+        all_rows.extend(rows)
+        print(f"\n== {name} (PAPER scale) ==")
+        print(fmt_table(rows, COLS))
+    save_rows("paper_case_studies", all_rows)
+    return all_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--studies", nargs="*", default=list(DEFAULT_STUDIES),
+                    choices=list(STUDIES))
+    ap.add_argument("--policies", nargs="*",
+                    default=list(DEFAULT_POLICIES))
+    ap.add_argument("--eps", nargs="*", type=float,
+                    default=list(DEFAULT_EPS))
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = one per CPU")
+    args = ap.parse_args()
+    run(studies=args.studies, policies=args.policies, eps=args.eps,
+        trials=args.trials, workers=args.workers)
+
+
+if __name__ == "__main__":
+    main()

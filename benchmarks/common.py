@@ -1,14 +1,19 @@
-"""Shared benchmark utilities: epsilon sweeps, tables, JSON dumps."""
+"""Shared benchmark utilities: epsilon sweeps, tables, JSON dumps.
+
+Sweeps run through ``repro.api.AutotuneSession`` — ``workers=N`` forks one
+process per in-flight sweep point (bit-identical to serial, merged in grid
+order) and ``checkpoint=path`` makes long sweeps resumable.
+"""
 
 from __future__ import annotations
 
 import json
 import os
-import time
-from typing import Dict, List, Sequence
+from typing import List, Optional, Sequence
 
-from repro.core.policies import POLICIES, policy
-from repro.core.tuner import Autotuner, Study
+from repro.api import AutotuneSession, SimBackend, StudyResult
+from repro.core.policies import POLICIES
+from repro.core.tuner import space_of_study
 
 ART = os.path.join(os.path.dirname(__file__), "results")
 
@@ -16,29 +21,37 @@ EPS_FULL = (1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125)
 EPS_FAST = (1.0, 0.25, 0.0625)
 
 
+def sweep_session(make_study, *, trials: int = 3,
+                  scale: str = "ci") -> AutotuneSession:
+    """Session over a paper study; ``make_study(scale)`` is one of
+    ``repro.linalg.studies.STUDIES``."""
+    return AutotuneSession(space_of_study(make_study(scale)),
+                           backend=SimBackend(), trials=trials)
+
+
 def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
                 eps: Sequence[float] = EPS_FAST, trials: int = 3,
                 seeds: Sequence[int] = (0,), allocations=(0,),
-                scale: str = "ci") -> List[dict]:
+                scale: str = "ci", workers: int = 1,
+                checkpoint: Optional[str] = None) -> List[dict]:
     """The paper's measurement protocol (§VI.A): for each policy x epsilon
     (x allocation), run the full exhaustive autotune and record speedup,
-    mean prediction error, optimum quality."""
-    rows = []
-    for pol in policies:
-        for e in eps:
-            for seed in seeds:
-                for alloc in allocations:
-                    study = make_study(scale)
-                    tuner = Autotuner(study, policy(pol, tolerance=e),
-                                      trials=trials, seed=seed,
-                                      allocation=alloc)
-                    t0 = time.time()
-                    rep = tuner.tune()
-                    row = rep.row()
-                    row.update(seed=seed, allocation=alloc,
-                               bench_wall_s=round(time.time() - t0, 1))
-                    rows.append(row)
-    return rows
+    mean prediction error, optimum quality.  ``workers=0`` means one per
+    CPU."""
+    if workers <= 0:
+        workers = max(os.cpu_count() or 1, 1)
+    session = sweep_session(make_study, trials=trials, scale=scale)
+    results = session.sweep(policies=policies, tolerances=eps, seeds=seeds,
+                            allocations=allocations, workers=workers,
+                            checkpoint=checkpoint)
+    return [result_row(r) for r in results]
+
+
+def result_row(r: StudyResult) -> dict:
+    row = r.row()
+    row.update(seed=r.seed, allocation=r.allocation,
+               bench_wall_s=round(r.wall_s, 1))
+    return row
 
 
 def fmt_table(rows: List[dict], cols: Sequence[str], *,

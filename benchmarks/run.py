@@ -6,7 +6,10 @@ Sections:
   3. LM autotune (the technique on our framework, measured)
   4. roofline table from the dry-run artifacts (if present)
 
-``--full`` widens epsilon sweeps and architectures.
+``--full`` widens epsilon sweeps and architectures.  ``--paper`` adds the
+paper-scale sweep (real processor counts, checkpointed + process-parallel
+via the session API; see ``bench_paper``).  ``--workers N`` parallelizes
+the sim-study sweeps (N=0: one per CPU).
 """
 
 from __future__ import annotations
@@ -19,15 +22,26 @@ import time
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--paper", action="store_true",
+                    help="also run the paper-scale sweep at real "
+                         "processor counts (slow; resumable)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-parallel sweep workers (0 = per CPU; "
+                         "default: per CPU for --paper, serial otherwise)")
     ap.add_argument("--sections", nargs="*",
                     default=["case", "beyond", "lm", "roofline"])
     args = ap.parse_args(argv)
     fast = not args.full
+    workers = args.workers if args.workers is not None \
+        else (0 if args.paper else 1)
     t0 = time.time()
 
+    if args.paper:
+        from . import bench_paper
+        bench_paper.run(workers=workers)
     if "case" in args.sections:
         from . import bench_case_studies
-        bench_case_studies.run(fast=fast)
+        bench_case_studies.run(fast=fast, workers=workers)
     if "beyond" in args.sections:
         from . import bench_beyond_paper
         bench_beyond_paper.run(fast=fast)

@@ -1,37 +1,31 @@
 """The paper's technique on the LM framework itself: selectively-timed
-autotuning of step-function configurations (real wall-clock, reduced arch).
+autotuning of step-function configurations (real wall-clock, reduced
+arch), through the session API with the wall-clock backend.
 
     PYTHONPATH=src python examples/autotune_lm.py [arch]
 """
 
 import sys
 
-import numpy as np
-
-from repro.core.policies import policy
-from repro.tune import LMStudy, SelectiveTimer, lm_config_space
+from repro.api import AutotuneSession, WallClockBackend
+from repro.tune import LMStudy
 
 
 def main():
     arch = sys.argv[1] if len(sys.argv) > 1 else "smollm-135m"
     study = LMStudy(arch, batch=2, seq=32)
-    space = lm_config_space(study.cfg)[:6]
-    timer = SelectiveTimer(policy("eager", tolerance=0.3, min_samples=3))
-    print(f"autotuning {len(space)} step configurations of reduced {arch} "
-          f"(eager policy, tol 0.3)\n")
-    tot_full = tot_cost = 0.0
-    preds = []
-    for kn in space:
-        pred, full, cost = study.run_config(kn, timer, iters=3)
-        tot_full += full * 3
-        tot_cost += cost
-        preds.append(pred)
-        print(f"  {kn.name:28s} predicted {pred * 1e3:7.1f} ms "
-              f"(full ref {full * 1e3:7.1f} ms)")
-    best = int(np.argmin(preds))
-    print(f"\nchosen config: {space[best].name}")
-    print(f"autotuning speedup vs full re-timing: "
-          f"{tot_full / max(tot_cost, 1e-12):.2f}x")
+    session = AutotuneSession(study.search_space(max_configs=6),
+                              backend=WallClockBackend(study.kernels_of),
+                              policy="eager", tolerance=0.3,
+                              min_samples=3, trials=3)
+    print(f"autotuning {len(session.space)} step configurations of "
+          f"reduced {arch} (eager policy, tol 0.3)\n")
+    result = session.run()
+    for rec in result.records:
+        print(f"  {rec.name:28s} predicted {rec.predicted * 1e3:7.1f} ms "
+              f"(full ref {rec.full_time * 1e3:7.1f} ms)")
+    print(f"\nchosen config: {result.chosen.name}")
+    print(f"autotuning speedup vs full re-timing: {result.speedup:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,34 +1,42 @@
-"""Quickstart: the paper's approximate autotuning, end to end.
+"""Quickstart: the paper's approximate autotuning, end to end, through the
+session API (`repro.api`).
 
 Autotunes Capital's recursive 3D Cholesky (15 configurations: block size x
 base-case strategy) on the virtual 64-rank machine, comparing full
 execution against the paper's five selective-execution policies at one
-confidence tolerance.
+confidence tolerance.  The policy sweep runs process-parallel (one forked
+worker per policy) and produces the same merged results as a serial run.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
 import time
 
-from repro.core.policies import POLICIES, policy
-from repro.core.tuner import Autotuner
-from repro.linalg.studies import capital_cholesky_study
+from repro.api import AutotuneSession, SimBackend
+from repro.core.policies import POLICIES
+from repro.linalg.studies import search_space
 
 
 def main():
     tol = 0.25
+    workers = min(len(POLICIES), os.cpu_count() or 1)
     print(f"autotuning Capital Cholesky (15 configs, 64 virtual ranks), "
-          f"tolerance {tol}\n")
+          f"tolerance {tol}, {workers} workers\n")
+    session = AutotuneSession(search_space("capital-cholesky"),
+                              backend=SimBackend(), tolerance=tol,
+                              trials=3)
+    t0 = time.time()
+    results = session.sweep(policies=list(POLICIES), workers=workers)
+    wall = time.time() - t0
     print(f"{'policy':13s} {'speedup':>8s} {'mean err':>9s} "
           f"{'optimum?':>9s} {'wall s':>7s}")
-    for pol in POLICIES:
-        study = capital_cholesky_study("ci")
-        t0 = time.time()
-        rep = Autotuner(study, policy(pol, tolerance=tol),
-                        trials=3, seed=0).tune()
-        print(f"{pol:13s} {rep.speedup:8.2f} {rep.mean_error:9.3f} "
-              f"{rep.optimum_quality:9.3f} {time.time() - t0:7.1f}")
-    print("\nspeedup   = full-execution tuning time / selective tuning time")
+    for rep in results:
+        print(f"{rep.policy:13s} {rep.speedup:8.2f} {rep.mean_error:9.3f} "
+              f"{rep.optimum_quality:9.3f} {rep.wall_s:7.1f}")
+    print(f"\nsweep wall time: {wall:.1f}s "
+          f"(sum of per-study walls {sum(r.wall_s for r in results):.1f}s)")
+    print("speedup   = full-execution tuning time / selective tuning time")
     print("mean err  = |predicted - measured| / measured, averaged")
     print("optimum?  = runtime of truly-best config / chosen config")
 

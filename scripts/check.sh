@@ -52,3 +52,42 @@ if best < RATIO * ref:
 print(f"OK: best warm throughput {best:.1f} >= {RATIO:.0%} of "
       f"baseline {ref:.1f}")
 EOF
+
+echo "== session-API smoke (serial vs 2-worker sweep) =="
+python - <<'EOF'
+import sys
+
+from repro.api import AutotuneSession, ConfigPoint, SearchSpace, SimBackend
+from repro.linalg import slate_cholesky
+
+space = SearchSpace(name="smoke-slate", world_size=16, points=[
+    ConfigPoint(name="t64-la1", params={"tile": 64},
+                payload=lambda w: slate_cholesky.make_program(
+                    w, n=512, tile=64, lookahead=1, pr=4, pc=4)),
+    ConfigPoint(name="t128-la0", params={"tile": 128},
+                payload=lambda w: slate_cholesky.make_program(
+                    w, n=512, tile=128, lookahead=0, pr=4, pc=4)),
+])
+
+def sweep(workers):
+    session = AutotuneSession(space, backend=SimBackend(), trials=2)
+    return session.sweep(policies=["conditional", "eager"],
+                         tolerances=[0.25], workers=workers)
+
+def strip(r):
+    d = r.to_json()
+    d.pop("wall_s")
+    return d
+
+serial = sweep(1)
+forked = sweep(2)
+if [strip(r) for r in serial] != [strip(r) for r in forked]:
+    print("FAIL: 2-worker sweep diverged from the serial run")
+    sys.exit(1)
+for r in serial:
+    if not (r.speedup > 0 and len(r.records) == 2):
+        print(f"FAIL: degenerate study result {r.row()}")
+        sys.exit(1)
+print(f"OK: session API serial == 2-worker "
+      f"({[round(r.speedup, 2) for r in serial]} speedups)")
+EOF

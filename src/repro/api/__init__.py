@@ -1,0 +1,40 @@
+"""repro.api — the supported autotuning front-end.
+
+Session-based access to the paper's confidence-interval-gated selective
+execution over pluggable measurement backends::
+
+    from repro.api import AutotuneSession, SimBackend
+    from repro.linalg.studies import search_space
+
+    result = AutotuneSession(search_space("slate-cholesky"),
+                             backend=SimBackend(), policy="online",
+                             tolerance=0.25).run()
+    print(result.speedup, result.chosen.name)
+
+Pieces:
+
+- ``SearchSpace`` / ``ConfigPoint``   what is tuned (``space``);
+- ``Backend``: ``SimBackend``, ``WallClockBackend``, ``DryRunBackend``
+  — how a configuration is measured (``backends``);
+- searches ``"exhaustive"`` and ``"racing"`` (``search``);
+- ``StudyResult`` / ``ConfigRecord``  uniform, JSON-lossless results
+  (``result``, ``serialize``);
+- ``AutotuneSession.sweep``  process-parallel, checkpoint/resumable
+  policy x tolerance grids (``session``, ``parallel``).
+"""
+
+from .backends import (Backend, BackendRun, DryRunBackend, Measurement,
+                       SimBackend, WallClockBackend, dryrun_space)
+from .result import ConfigRecord, StudyResult
+from .search import SEARCHES, exhaustive, measure_config, racing
+from .serialize import from_jsonable, to_jsonable
+from .session import AutotuneSession
+from .space import RESET_POLICY, ConfigPoint, SearchSpace
+
+__all__ = [
+    "AutotuneSession", "Backend", "BackendRun", "ConfigPoint",
+    "ConfigRecord", "DryRunBackend", "Measurement", "RESET_POLICY",
+    "SEARCHES", "SearchSpace", "SimBackend", "StudyResult",
+    "WallClockBackend", "dryrun_space", "exhaustive", "from_jsonable",
+    "measure_config", "racing", "to_jsonable",
+]

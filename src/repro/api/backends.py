@@ -1,0 +1,359 @@
+"""Pluggable execution backends for the session front-end.
+
+A ``Backend`` answers one question — "what does configuration X cost?" —
+through whichever measurement substrate it owns:
+
+- ``SimBackend``       virtual-machine studies: the simmpi ``Runtime``
+                       driving ``Critter`` interception over a schedule
+                       program (the paper's evaluation vehicle);
+- ``WallClockBackend`` real timing of jitted-closure kernel sequences via
+                       ``SelectiveTimer`` (the paper's technique on the LM
+                       framework itself);
+- ``DryRunBackend``    compiled HLO/jaxpr roofline cost on the production
+                       mesh (no execution at all — each "measurement" is a
+                       lowering).
+
+A backend is a lightweight, reusable factory; ``open(space, policy, ...)``
+builds the per-(study, policy) execution context (``BackendRun``) holding
+all mutable state, so one backend object can serve many sweep points, each
+deterministic and independent — the property the parallel sweep relies on.
+
+The run protocol mirrors the paper's per-configuration measurement
+sequence (§VI.A), which the search drivers orchestrate:
+
+- ``run_reference``  full execution, models untouched (error reference);
+- ``run_offline``    full execution that FEEDS the models (the a-priori
+                     policy's charged offline pass);
+- ``run_trial``      one selective execution;
+- ``reset_models``   forget kernel statistics (between configurations).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.policies import Policy
+
+from .space import ConfigPoint, SearchSpace
+
+
+@dataclass
+class Measurement:
+    """One execution's outcome, backend-agnostic.
+
+    ``time`` is what the run actually took (the full-execution reference
+    time when forced); ``cost`` is the wall time charged to the autotuning
+    budget; ``predicted`` the selective estimate of the configuration's
+    time; ``comp`` the critical-path computation component (0 when the
+    backend has no path decomposition).
+    """
+
+    predicted: float
+    time: float
+    cost: float
+    comp: float = 0.0
+    executed: int = 0
+    skipped: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+class BackendRun:
+    """Per-(study, policy) execution context.  Subclasses own all mutable
+    measurement state; the base class only fixes the interface."""
+
+    def carry_state(self) -> Optional[dict]:
+        """JSON-able state that survives a model reset and must carry into
+        the next configuration for a resumed study to be bit-identical to
+        an uninterrupted one (the sim backend's RNG stream).  ``None``
+        when the backend has no such state."""
+        return None
+
+    def restore_carry(self, state: Optional[dict]) -> None:
+        if state is not None:
+            raise NotImplementedError(
+                f"{type(self).__name__} cannot restore carry state")
+
+    def reset_models(self) -> None:
+        raise NotImplementedError
+
+    def run_reference(self, point: ConfigPoint) -> Measurement:
+        raise NotImplementedError
+
+    def run_offline(self, point: ConfigPoint) -> Measurement:
+        raise NotImplementedError(
+            "this backend has no offline pass; the 'apriori' policy "
+            "requires SimBackend")
+
+    def run_trial(self, point: ConfigPoint) -> Measurement:
+        raise NotImplementedError
+
+
+class Backend:
+    """Backend factory protocol: stateless description + ``open``."""
+
+    name: str = "?"
+    #: False for backends whose runs touch JAX/XLA (forked children can
+    #: deadlock on runtime locks) or measure real wall clock (forked
+    #: siblings contend for cores and corrupt timings) — sweeps over such
+    #: backends are forced serial regardless of ``workers``.
+    parallel_safe: bool = True
+
+    def fingerprint(self) -> dict:
+        """JSON-able identity of this backend's measurement configuration,
+        part of the session checkpoint key: results journaled under one
+        configuration must not be replayed as another's."""
+        return {"name": self.name}
+
+    def open(self, space: SearchSpace, policy: Policy, *,
+             seed: int = 0, allocation: int = 0) -> BackendRun:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------- sim
+
+class SimBackend(Backend):
+    """Virtual-machine measurement: simmpi ``Runtime`` + ``Critter``.
+
+    Point payloads are program factories ``make_program(world) ->
+    program_factory(rank, world)`` (the ``Configuration.make_program``
+    convention of the linalg studies).
+    """
+
+    name = "sim"
+
+    def __init__(self, *, machine=None, timer: Optional[Callable] = None,
+                 cost_model=None, overhead: float = 1e-6):
+        self.machine = machine
+        self.timer = timer
+        self.cost_model = cost_model
+        self.overhead = overhead
+
+    def fingerprint(self) -> dict:
+        # custom timing callables cannot be fingerprinted beyond their
+        # presence; "custom" still prevents the worst confusion (replaying
+        # a deterministic-timer journal as a default-cost-model study)
+        return {"name": self.name, "overhead": self.overhead,
+                "machine": getattr(self.machine, "name", None),
+                "timer": "custom" if self.timer is not None else "default",
+                "cost_model": "custom" if self.cost_model is not None
+                else "default"}
+
+    def open(self, space: SearchSpace, policy: Policy, *,
+             seed: int = 0, allocation: int = 0) -> "SimRun":
+        return SimRun(space, policy, machine=self.machine,
+                      timer=self.timer, cost_model=self.cost_model,
+                      overhead=self.overhead, seed=seed,
+                      allocation=allocation)
+
+
+class SimRun(BackendRun):
+    def __init__(self, space: SearchSpace, policy: Policy, *, machine,
+                 timer, cost_model, overhead, seed: int, allocation: int):
+        # local imports keep repro.api importable without the sim stack
+        from repro.core.critter import Critter
+        from repro.simmpi.comm import World
+        from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+        from repro.simmpi.runtime import Runtime
+
+        if not space.world_size:
+            raise ValueError(f"space {space.name!r} has no world_size; "
+                             "SimBackend needs a virtual machine size")
+        self.policy = policy
+        self.world = World(space.world_size)
+        self.critter = Critter(self.world, policy)
+        if timer is None:
+            cm = cost_model or CostModel(
+                machine or space.machine or KNL_STAMPEDE2,
+                allocation=allocation, seed=seed)
+            timer = cm.sample
+        self.runtime = Runtime(self.world, self.critter, timer,
+                               seed=seed + 17 * allocation,
+                               overhead=overhead)
+        # one program factory per configuration payload, created on first
+        # use — its identity keys the runtime's event-trace cache.  Keyed
+        # by the payload callable (not the point name) so an ad-hoc point
+        # that reuses a study point's name still measures its own program.
+        self._progs: Dict[Any, Any] = {}
+
+    def _prog(self, point: ConfigPoint):
+        prog = self._progs.get(point.payload)
+        if prog is None:
+            prog = self._progs[point.payload] = point.payload(self.world)
+        return prog
+
+    @staticmethod
+    def _measure(res) -> Measurement:
+        return Measurement(predicted=res.predicted_time,
+                           time=res.wall_time, cost=res.wall_time,
+                           comp=res.crit_comp, executed=res.executed,
+                           skipped=res.skipped)
+
+    def carry_state(self) -> dict:
+        # the lognormal sampling stream runs continuously across
+        # configurations; a resumed study must pick it up where the
+        # interrupted one left off
+        return {"rng": self.runtime._rng.bit_generator.state}
+
+    def restore_carry(self, state: Optional[dict]) -> None:
+        if state is not None:
+            self.runtime._rng.bit_generator.state = state["rng"]
+
+    def reset_models(self) -> None:
+        self.critter.reset_models()
+
+    def run_reference(self, point: ConfigPoint) -> Measurement:
+        res = self.runtime.run(self._prog(point), force_execute=True,
+                               update_stats=False)
+        return self._measure(res)
+
+    def run_offline(self, point: ConfigPoint) -> Measurement:
+        res = self.runtime.run(self._prog(point), force_execute=True,
+                               update_stats=True)
+        self.critter.snapshot_apriori_counts()
+        return self._measure(res)
+
+    def run_trial(self, point: ConfigPoint) -> Measurement:
+        return self._measure(self.runtime.run(self._prog(point)))
+
+
+# --------------------------------------------------------------- wall clock
+
+class WallClockBackend(Backend):
+    """Real wall-clock timing of recurring kernels via ``SelectiveTimer``.
+
+    ``kernels_of(point) -> [(Signature, thunk, freq)]`` resolves a point to
+    its step's kernel occurrence list (thunks pre-compiled, so timing sees
+    only execution); ``freq`` is the kernel's per-step occurrence count
+    (the paper's alpha).  ``LMStudy.kernels_of`` is the canonical provider.
+    """
+
+    name = "wallclock"
+    parallel_safe = False     # real timing + jitted closures: serial only
+
+    def __init__(self, kernels_of: Callable[[ConfigPoint], Sequence[Tuple]],
+                 *, clock: Optional[Callable[[], float]] = None):
+        self.kernels_of = kernels_of
+        self.clock = clock
+
+    def fingerprint(self) -> dict:
+        return {"name": self.name,
+                "clock": "custom" if self.clock is not None else "default"}
+
+    def open(self, space: SearchSpace, policy: Policy, *,
+             seed: int = 0, allocation: int = 0) -> "WallClockRun":
+        return WallClockRun(self.kernels_of, policy, clock=self.clock)
+
+
+class WallClockRun(BackendRun):
+    def __init__(self, kernels_of, policy: Policy, *, clock=None):
+        from repro.tune.selective import SelectiveTimer
+        self.policy = policy
+        self.timer = SelectiveTimer(policy, clock=clock)
+        self.kernels_of = kernels_of
+
+    def reset_models(self) -> None:
+        self.timer.reset_models()
+
+    def run_reference(self, point: ConfigPoint) -> Measurement:
+        clock = self.timer.clock
+        total = 0.0
+        n = 0
+        for sig, thunk, freq in self.kernels_of(point):
+            t0 = clock()
+            thunk()
+            total += clock() - t0
+            n += 1
+        # the reference is not charged to the tuning budget (the driver
+        # accounts full_cost = full_time x trials, as the paper does)
+        return Measurement(predicted=total, time=total, cost=0.0,
+                           executed=n)
+
+    def run_trial(self, point: ConfigPoint) -> Measurement:
+        timer = self.timer
+        timer.begin_iteration()
+        for sig, thunk, freq in self.kernels_of(point):
+            timer.time_kernel(sig, thunk, freq)
+        rep = timer.report()
+        return Measurement(predicted=rep.predicted_time,
+                           time=rep.measured_time, cost=rep.measured_time,
+                           executed=rep.executed, skipped=rep.skipped)
+
+
+# ------------------------------------------------------------------ dry run
+
+class DryRunBackend(Backend):
+    """Compile-and-score: ranks configurations by the dominant roofline
+    term of their lowered HLO on the production mesh (``tune.dryrun_search``
+    machinery).  Deterministic — use ``trials=1``; the "full" and
+    "selective" times coincide, so a DryRunBackend study degenerates to a
+    ranked table with speedup 1, which is exactly what a cost-model search
+    is.  Point payloads are ``tune.dryrun_search.SearchPoint``s.
+    """
+
+    name = "dryrun"
+    parallel_safe = False     # XLA compiles deadlock in forked children
+
+    def __init__(self, arch: str, shape: str, *, multi_pod: bool = False,
+                 cache_dir: Optional[str] = None):
+        self.arch = arch
+        self.shape = shape
+        self.multi_pod = multi_pod
+        self.cache_dir = cache_dir
+
+    def fingerprint(self) -> dict:
+        return {"name": self.name, "arch": self.arch, "shape": self.shape,
+                "multi_pod": self.multi_pod}
+
+    def open(self, space: SearchSpace, policy: Policy, *,
+             seed: int = 0, allocation: int = 0) -> "DryRunRun":
+        return DryRunRun(self)
+
+
+class DryRunRun(BackendRun):
+    def __init__(self, backend: DryRunBackend):
+        self.b = backend
+        self._recs: Dict[str, dict] = {}
+
+    def reset_models(self) -> None:
+        pass                        # nothing accumulates across configs
+
+    def _evaluate(self, point: ConfigPoint) -> dict:
+        rec = self._recs.get(point.name)
+        if rec is None:
+            from repro.tune.dryrun_search import evaluate_point
+            try:
+                rec = evaluate_point(self.b.arch, self.b.shape,
+                                     point.payload,
+                                     multi_pod=self.b.multi_pod,
+                                     cache_dir=self.b.cache_dir)
+            except Exception as e:   # lowering failures are search results
+                rec = {"error": repr(e)}
+            self._recs[point.name] = rec
+        return rec
+
+    def _measure(self, rec: dict) -> Measurement:
+        if "error" in rec:
+            return Measurement(predicted=float("inf"), time=float("inf"),
+                               cost=0.0, extra=dict(rec))
+        t = float(rec["roofline"]["step_s"])
+        # "full" and "selective" coincide for a pure cost model: each trial
+        # charges the modeled step time, so full_cost == selective_cost and
+        # the study degenerates to a ranked table with speedup exactly 1
+        # (the compile time itself stays available in extra["compile_s"])
+        return Measurement(predicted=t, time=t, cost=t, extra=dict(rec))
+
+    def run_reference(self, point: ConfigPoint) -> Measurement:
+        return self._measure(self._evaluate(point))
+
+    def run_trial(self, point: ConfigPoint) -> Measurement:
+        return self._measure(self._evaluate(point))
+
+
+def dryrun_space(arch: str, shape: str, points) -> SearchSpace:
+    """Wrap ``tune.dryrun_search.SearchPoint``s for the session API."""
+    return SearchSpace(
+        name=f"dryrun-{arch}-{shape}",
+        points=[ConfigPoint(name=p.name, params=dict(p.__dict__),
+                            payload=p) for p in points],
+        reset_between_configs=False)

@@ -1,0 +1,170 @@
+"""Search drivers over a backend run (lifted out of ``core.tuner``).
+
+``exhaustive`` is the paper's evaluation protocol (§VI.A): for each
+configuration, one full reference execution, the policy's optional charged
+offline pass, then ``trials`` selective executions; statistics reset
+between configurations per the space's protocol switch.
+
+``racing`` is the beyond-paper successive-elimination search driven by the
+paper's own confidence intervals: each round gives every surviving
+configuration one selective trial and prunes a configuration once the
+lower CI bound of its predicted time exceeds the incumbent's upper bound.
+
+Both produce the uniform ``ConfigRecord``/``StudyResult`` rows; the
+``Autotuner`` shim in ``core.tuner`` delegates here, so the sim goldens
+pin these drivers bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.core.stats import t_quantile_975
+
+from .result import ConfigRecord
+from .space import ConfigPoint, SearchSpace
+
+# NOTE: this module deliberately does not import .backends (the run is
+# duck-typed) — core.tuner imports these drivers at module level, and a
+# .backends dependency would close an import cycle through repro.core.
+
+SEARCHES = ("exhaustive", "racing")
+
+
+def measure_config(run: "BackendRun", point: ConfigPoint, policy: Policy, *,
+                   trials: int = 3) -> ConfigRecord:
+    """The paper's per-configuration measurement sequence."""
+    ref = run.run_reference(point)
+    full_time = ref.time
+
+    selective_cost = 0.0
+    if policy.needs_offline_pass:
+        off = run.run_offline(point)
+        selective_cost += off.cost
+
+    predictions: List[float] = []
+    last = ref
+    for _ in range(trials):
+        last = run.run_trial(point)
+        selective_cost += last.cost
+        predictions.append(last.predicted)
+
+    predicted = predictions[-1]
+    rel_error = (abs(predicted - full_time) / full_time
+                 if full_time > 0 else 0.0)
+    comp_error = (abs(last.comp - ref.comp) / ref.comp
+                  if ref.comp > 0 else 0.0)
+    extra = dict(ref.extra)
+    extra.update(last.extra)
+    return ConfigRecord(
+        name=point.name, params=point.params, full_time=full_time,
+        predicted=predicted, rel_error=rel_error, comp_error=comp_error,
+        selective_cost=selective_cost, full_cost=full_time * trials,
+        executed=last.executed, skipped=last.skipped,
+        predictions=predictions, extra=extra)
+
+
+def exhaustive(run: "BackendRun", space: SearchSpace, policy: Policy, *,
+               trials: int = 3,
+               start_records: Optional[List[ConfigRecord]] = None,
+               on_record: Optional[Callable[[ConfigRecord], None]] = None,
+               ) -> Tuple[List[ConfigRecord], dict]:
+    """Measure every point in order.  ``start_records`` resumes a
+    checkpointed study: the first ``len(start_records)`` points are taken
+    as done (valid because resumption is only offered when statistics
+    reset between configurations, so a fresh backend run at point k is in
+    the same state as one that measured points 0..k-1 and reset)."""
+    records = list(start_records or ())
+    reset = space.should_reset(policy)
+    for i, point in enumerate(space.points):
+        if i < len(records):
+            continue
+        if i > 0 and reset:
+            run.reset_models()
+        rec = measure_config(run, point, policy, trials=trials)
+        records.append(rec)
+        if on_record is not None:
+            on_record(rec)
+    return records, {}
+
+
+def racing(run: "BackendRun", space: SearchSpace, policy: Policy, *,
+           max_rounds: int = 6, min_survivor_trials: int = 2,
+           trials: int = 1) -> Tuple[List[ConfigRecord], dict]:
+    """Successive elimination driven by the paper's CIs.
+
+    The per-kernel statistical machinery is reused verbatim — racing only
+    changes *which* configurations keep getting iterations, exactly the
+    composition the paper suggests with search-space pruning studies.
+    Models are never reset (racing interleaves configurations; resetting
+    would discard everything each step).
+
+    Returns one record per configuration: ``predictions`` holds the
+    config's per-round selective samples, ``predicted`` their mean, and
+    ``extra`` carries the racing artifacts (round pruned, survivor set).
+    ``trials`` is accepted for driver-signature uniformity and ignored
+    (each round is one trial per survivor).
+    """
+    points = list(space.points)
+    samples: Dict[str, List[float]] = {p.name: [] for p in points}
+    costs: Dict[str, float] = {p.name: 0.0 for p in points}
+    counts: Dict[str, Tuple[int, int]] = {p.name: (0, 0) for p in points}
+    active = {p.name for p in points}
+    pruned_at: Dict[str, int] = {}
+    cost = 0.0
+
+    def ci(name: str) -> Tuple[float, float]:
+        xs = samples[name]
+        n = len(xs)
+        m = float(np.mean(xs))
+        if n < 2:
+            return m, math.inf
+        hw = t_quantile_975(n - 1) * float(np.std(xs, ddof=1)) \
+            / math.sqrt(n)
+        return m, hw
+
+    rounds = 0
+    for rnd in range(max_rounds):
+        rounds = rnd + 1
+        for p in points:
+            if p.name not in active:
+                continue
+            m = run.run_trial(p)
+            cost += m.cost
+            costs[p.name] += m.cost
+            counts[p.name] = (m.executed, m.skipped)
+            samples[p.name].append(m.predicted)
+        stats = {nm: ci(nm) for nm in active}
+        inc = min(stats, key=lambda nm: stats[nm][0])
+        inc_hi = stats[inc][0] + stats[inc][1]
+        for nm in list(active):
+            if nm == inc:
+                continue
+            m, hw = stats[nm]
+            if len(samples[nm]) >= min_survivor_trials and m - hw > inc_hi:
+                active.remove(nm)
+                pruned_at[nm] = rnd
+        if len(active) == 1:
+            break
+
+    best = min(active, key=lambda nm: float(np.mean(samples[nm])))
+    records = []
+    for p in points:
+        xs = samples[p.name]
+        ex, sk = counts[p.name]
+        records.append(ConfigRecord(
+            name=p.name, params=p.params, full_time=0.0,
+            predicted=float(np.mean(xs)) if xs else math.inf,
+            rel_error=0.0, comp_error=0.0,
+            selective_cost=costs[p.name], full_cost=0.0,
+            executed=ex, skipped=sk, predictions=list(xs),
+            extra={"pruned_at": pruned_at.get(p.name)}))
+    extra = {"best": best, "survivors": sorted(active),
+             "pruned_at": pruned_at, "rounds": rounds,
+             "total_iterations": sum(len(v) for v in samples.values()),
+             "cost": cost}
+    return records, extra

@@ -1,0 +1,265 @@
+"""The unified autotuning front-end.
+
+One declarative entry point over every tuning path in the repo::
+
+    from repro.api import AutotuneSession, SimBackend
+    from repro.linalg.studies import search_space
+
+    session = AutotuneSession(search_space("capital-cholesky"),
+                              backend=SimBackend(),
+                              policy="eager", tolerance=0.25)
+    result = session.run()            # -> StudyResult
+
+- ``space``    a ``SearchSpace`` (what is tuned);
+- ``backend``  a ``Backend`` (how a configuration is measured): sim,
+               wall clock, or dry run;
+- ``policy`` / ``tolerance``  the paper's selective-execution policy and
+               confidence tolerance;
+- ``search``   ``"exhaustive"`` (paper protocol) or ``"racing"``
+               (CI-driven successive elimination).
+
+``run`` measures one (policy, tolerance) study.  ``sweep`` runs the
+paper's policy x tolerance measurement grid, optionally process-parallel
+(``workers=N``; fork-based, bit-identical to the serial run, merged in
+deterministic task order) and optionally checkpointed (``checkpoint=
+path``: completed sweep points — and completed configurations inside a
+resumable exhaustive study — are journaled to JSON and skipped on
+re-run, so long paper-scale sweeps survive interruption).
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import time
+from dataclasses import replace
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+from repro.core.policies import Policy, policy as make_policy
+
+from . import search as _search
+from .backends import Backend
+from .parallel import run_tasks
+from .result import StudyResult
+from .space import SearchSpace
+
+_DRIVERS = {"exhaustive": _search.exhaustive, "racing": _search.racing}
+
+
+class AutotuneSession:
+    """A tuning study bound to a space, a backend, and a protocol."""
+
+    def __init__(self, space: SearchSpace, backend: Backend, *,
+                 policy: Union[str, Policy] = "conditional",
+                 tolerance: Optional[float] = None,
+                 search: str = "exhaustive", trials: int = 3,
+                 seed: int = 0, allocation: int = 0,
+                 search_options: Optional[dict] = None,
+                 **policy_kwargs):
+        if search not in _DRIVERS:
+            raise ValueError(f"unknown search {search!r}; "
+                             f"want one of {tuple(_DRIVERS)}")
+        self.space = space
+        self.backend = backend
+        self.search = search
+        self.trials = trials
+        self.seed = seed
+        self.allocation = allocation
+        self.search_options = dict(search_options or {})
+        if isinstance(policy, Policy):
+            self._base_policy = policy if tolerance is None \
+                else replace(policy, tolerance=tolerance)
+        else:
+            self._base_policy = make_policy(
+                policy, tolerance=0.25 if tolerance is None else tolerance,
+                **policy_kwargs)
+
+    # -- policy resolution ---------------------------------------------------
+
+    def _policy(self, name: Optional[str] = None,
+                tolerance: Optional[float] = None) -> Policy:
+        pol = self._base_policy
+        if name is not None and name != pol.name:
+            # carry every other policy field (min_samples, vote fraction,
+            # extrapolate) across the sweep grid — a sweep must compare
+            # policies under one statistical setting
+            pol = replace(pol, name=name)
+        if tolerance is not None:
+            pol = replace(pol, tolerance=tolerance)
+        return pol
+
+    # -- one study -----------------------------------------------------------
+
+    def _key(self, pol: Policy, seed: int, allocation: int) -> dict:
+        return {"space": self.space.name, "n_points": len(self.space),
+                "backend": self.backend.fingerprint(),
+                "policy": pol.name,
+                "tolerance": pol.tolerance, "trials": self.trials,
+                "search": self.search, "seed": seed,
+                "allocation": allocation}
+
+    def _run_one(self, pol: Policy, seed: int, allocation: int, *,
+                 checkpoint: Optional["_Checkpoint"] = None) -> StudyResult:
+        t0 = time.time()
+        run = self.backend.open(self.space, pol, seed=seed,
+                                allocation=allocation)
+        driver = _DRIVERS[self.search]
+        opts = dict(self.search_options)
+        key = self._key(pol, seed, allocation)
+        start = None
+        if checkpoint is not None and self.search == "exhaustive" \
+                and self.space.should_reset(pol):
+            # per-configuration journaling is protocol-safe only when
+            # statistics reset between configurations: a fresh backend at
+            # point k is then in the same state as one that measured
+            # points 0..k-1 — up to the backend's carry state (the sim
+            # RNG stream), journaled with every record and restored here
+            # (anything else resumes whole studies only)
+            start, carry = checkpoint.partial(key)
+            if start:
+                run.restore_carry(carry)
+            opts["start_records"] = start
+            opts["on_record"] = lambda rec: checkpoint.add_record(
+                key, rec, run.carry_state())
+        records, extra = driver(run, self.space, pol, trials=self.trials,
+                                **opts)
+        result = StudyResult(
+            study=self.space.name, policy=pol.name,
+            tolerance=pol.tolerance, records=records,
+            full_tuning_time=sum(r.full_cost for r in records),
+            selective_tuning_time=sum(r.selective_cost for r in records),
+            backend=self.backend.name, search=self.search, seed=seed,
+            allocation=allocation, wall_s=round(time.time() - t0, 3),
+            extra=extra)
+        return result
+
+    def run(self, *, checkpoint: Optional[str] = None) -> StudyResult:
+        """Run the study; with ``checkpoint``, resume a partial one."""
+        pol = self._policy()
+        if checkpoint is None:
+            return self._run_one(pol, self.seed, self.allocation)
+        ck = _Checkpoint(checkpoint)
+        key = self._key(pol, self.seed, self.allocation)
+        done = ck.result_for(key)
+        if done is not None:
+            return done
+        result = self._run_one(pol, self.seed, self.allocation,
+                               checkpoint=ck)
+        ck.add_result(key, result)
+        return result
+
+    # -- policy x tolerance sweeps -------------------------------------------
+
+    def sweep(self, *, policies: Optional[Sequence[str]] = None,
+              tolerances: Optional[Sequence[float]] = None,
+              seeds: Sequence[int] = (0,),
+              allocations: Sequence[int] = (0,),
+              workers: int = 1,
+              checkpoint: Optional[str] = None) -> List[StudyResult]:
+        """The paper's measurement grid (§VI.A): one independent study per
+        (policy, tolerance, seed, allocation), merged in grid order."""
+        policies = list(policies) if policies is not None \
+            else [self._base_policy.name]
+        tolerances = list(tolerances) if tolerances is not None \
+            else [self._base_policy.tolerance]
+        grid = list(itertools.product(policies, tolerances, seeds,
+                                      allocations))
+        ck = _Checkpoint(checkpoint) if checkpoint else None
+
+        results: List[Optional[StudyResult]] = [None] * len(grid)
+        todo = []
+        for i, spec in enumerate(grid):
+            pol = self._policy(spec[0], spec[1])
+            done = ck.result_for(self._key(pol, spec[2], spec[3])) \
+                if ck else None
+            if done is not None:
+                results[i] = done
+            else:
+                todo.append((i, spec))
+
+        if not getattr(self.backend, "parallel_safe", True):
+            workers = 1       # jax/wall-clock backends measure serially
+
+        # serial execution journals inside each study too (per-config
+        # records survive a kill mid-study); forked children cannot share
+        # the journal file, so parallel sweeps checkpoint whole points
+        inflight_ck = ck if workers <= 1 else None
+
+        def runner(spec) -> dict:
+            pol = self._policy(spec[0], spec[1])
+            return self._run_one(pol, spec[2], spec[3],
+                                 checkpoint=inflight_ck).to_json()
+
+        def land(j: int, res: dict) -> None:
+            i = todo[j][0]
+            results[i] = StudyResult.from_json(res)
+            if ck:
+                pol = self._policy(*todo[j][1][:2])
+                ck.add_result(self._key(pol, *todo[j][1][2:]), results[i])
+
+        run_tasks([spec for _, spec in todo], runner, workers=workers,
+                  on_result=land)
+        return list(results)
+
+
+# ----------------------------------------------------------------- journal
+
+class _Checkpoint:
+    """JSON journal of completed studies / configuration records.
+
+    One file holds a dict keyed by the study key's canonical JSON:
+    ``{"results": {key: result_json},
+       "records": {key: {"recs": [record_json], "carry": state}}}``.
+    Writes are atomic (tmp + rename) after every landed unit, so a killed
+    sweep loses at most the in-flight measurement.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._data: Dict[str, Any] = {"results": {}, "records": {}}
+        if os.path.exists(path):
+            with open(path) as f:
+                loaded = json.load(f)
+            if not isinstance(loaded, dict) or "results" not in loaded:
+                raise ValueError(f"{path}: not a session checkpoint file")
+            self._data = loaded
+            self._data.setdefault("records", {})
+
+    @staticmethod
+    def _k(key: dict) -> str:
+        return json.dumps(key, sort_keys=True)
+
+    def _flush(self) -> None:
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._data, f)
+        os.replace(tmp, self.path)
+
+    def result_for(self, key: dict) -> Optional[StudyResult]:
+        got = self._data["results"].get(self._k(key))
+        return StudyResult.from_json(got) if got is not None else None
+
+    def add_result(self, key: dict, result: StudyResult) -> None:
+        k = self._k(key)
+        self._data["results"][k] = result.to_json()
+        self._data["records"].pop(k, None)   # subsumed by the full result
+        self._flush()
+
+    def partial(self, key: dict):
+        """(records-so-far, carry-state-after-the-last-one)."""
+        from .result import ConfigRecord
+        got = self._data["records"].get(self._k(key))
+        if not got:
+            return [], None
+        return ([ConfigRecord.from_json(r) for r in got["recs"]],
+                got.get("carry"))
+
+    def add_record(self, key: dict, record, carry=None) -> None:
+        entry = self._data["records"].setdefault(
+            self._k(key), {"recs": [], "carry": None})
+        entry["recs"].append(record.to_json())
+        entry["carry"] = carry
+        self._flush()

@@ -36,7 +36,7 @@ Hot-path layout (this refactor — protocol preserved bit-for-bit, see
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -245,6 +245,20 @@ class Critter:
         stats = self.state.kbar[rank].get(sid)
         return stats is None or stats.n == 0
 
+    def _note_stats(self, rank: int, sid: int, stats: KernelStats) -> None:
+        """Eager-only: keep ``pred_live[rank]`` in sync after a statistics
+        write.  Membership mirrors the aggregate_statistics candidate
+        precondition — predictable at critical-path count 1 — and is NOT
+        monotone (new samples can widen the CI), so the verdict is
+        recomputed at every write; ``is_predictable`` memoizes on (n, tol)
+        so this is one cached check per write."""
+        if stats.n >= self._ms and stats.is_predictable(self._tol, 1,
+                                                        self._ms):
+            if sid not in self.global_off:
+                self.state.pred_live[rank].add(sid)
+        else:
+            self.state.pred_live[rank].discard(sid)
+
     def _should_execute_local(self, rank: int, sid: int) -> bool:
         if self.force_execute:
             return True
@@ -287,6 +301,8 @@ class Critter:
                 stats = S.stats(rank, sid)
                 stats.update(t)
                 S.mean_arr[rank, sid] = stats.mean
+                if self._eager:
+                    self._note_stats(rank, sid, stats)
             S.iter_exec[rank, sid] = True
             S.clock[rank] += t
             S.measured_time[rank] += t
@@ -397,10 +413,13 @@ class Critter:
             new_clock = max_clock + t
             if self.update_stats:
                 mean_col = S.mean_arr
+                eager = self._eager
                 for r in ranks:
                     stats = S.stats(r, sid)
                     stats.update(t)
                     mean_col[r, sid] = stats.mean
+                    if eager:
+                        self._note_stats(r, sid, stats)
                 S.skip_ok[ridx, sid] = False    # statistics changed
             S.iter_exec[ridx, sid] = True
             S.clock[ridx] = new_clock
@@ -494,24 +513,34 @@ class Critter:
         S = self.state
         ranks = comm.ranks
         chash = comm.channel.hash_id
-        tol, ms = self._tol, self._ms
         global_off = self.global_off
         # candidate kernels: predictable on >= 1 participant, not yet
-        # propagated along this channel everywhere
-        cands: List[int] = []
+        # propagated along this channel.  The scan walks each participant's
+        # pred_live dirty set (maintained at every statistics write, see
+        # _note_stats) instead of its whole K-bar; sids switched off
+        # globally since their last write are evicted lazily here.
         candset = set()
         for r in ranks:
+            live = S.pred_live[r]
+            if not live:
+                continue
             agg_r = S.agg_channels[r]
-            for sid, stats in S.kbar[r].items():
-                if sid in global_off or sid in candset:
+            stale = None
+            for sid in live:
+                if sid in global_off:
+                    if stale is None:
+                        stale = []
+                    stale.append(sid)
                     continue
                 chans = agg_r.get(sid)
                 if chans is not None and chash in chans:
                     continue
-                if stats.is_predictable(tol, 1, ms):
-                    candset.add(sid)
-                    cands.append(sid)
-        for sid in cands:
+                candset.add(sid)
+            if stale:
+                live.difference_update(stale)
+        # per-sid merges are independent, so candidate order cannot affect
+        # the result; sort anyway for a deterministic event stream
+        for sid in sorted(candset):
             merged = KernelStats()
             for r in ranks:
                 stats = S.kbar[r].get(sid)
@@ -519,9 +548,10 @@ class Critter:
                     merged.merge(stats)
             covered = False
             for r in ranks:
-                S.kbar[r][sid] = merged.copy()
+                inst = S.kbar[r][sid] = merged.copy()
                 S.mean_arr[r, sid] = merged.mean
                 S.skip_ok[r, sid] = False       # statistics changed
+                self._note_stats(r, sid, inst)
                 agg_r = S.agg_channels[r]
                 chans = agg_r.get(sid)
                 if chans is None:
@@ -585,6 +615,8 @@ class Critter:
                     stats.update(t)
                     S.mean_arr[r, sid] = stats.mean
                     S.skip_ok[r, sid] = False   # statistics changed
+                    if self._eager:
+                        self._note_stats(r, sid, stats)
                 S.iter_exec[r, sid] = True
                 S.measured_time[r] += t
                 S.executed[r] += 1
@@ -637,6 +669,8 @@ class Critter:
                     stats.update(t)
                     S.mean_arr[r, sid] = stats.mean
                     S.skip_ok[r, sid] = False   # statistics changed
+                    if self._eager:
+                        self._note_stats(r, sid, stats)
                 S.iter_exec[r, sid] = True
                 S.executed[r] += 1
             S.measured_time[dst] += t

@@ -53,7 +53,7 @@ class EngineState:
                  "path_comm", "path_kernels", "measured_time",
                  "measured_comp", "executed", "skipped", "freq", "seen",
                  "iter_exec", "mean_arr", "skip_ok", "goff", "gmean",
-                 "kbar", "agg_channels")
+                 "kbar", "agg_channels", "pred_live")
 
     def __init__(self, n_ranks: int, cap: int = 256):
         self.n_ranks = n_ranks
@@ -91,6 +91,13 @@ class EngineState:
         # propagated along (eager), per rank {sid: set-of-hash}
         self.agg_channels: List[Dict[int, Set[int]]] = \
             [dict() for _ in range(n_ranks)]
+        # eager-only dirty set: sids whose CURRENT statistics on this rank
+        # are predictable at critical-path count 1 — exactly the candidate
+        # precondition of aggregate_statistics, maintained incrementally at
+        # every statistics write so the per-collective scan touches only
+        # these instead of walking the whole K-bar (sids already switched
+        # off globally are filtered lazily during the scan)
+        self.pred_live: List[Set[int]] = [set() for _ in range(n_ranks)]
 
     # -- capacity ------------------------------------------------------------
 
@@ -135,6 +142,8 @@ class EngineState:
             d.clear()
         for d in self.agg_channels:
             d.clear()
+        for s in self.pred_live:
+            s.clear()
         self.seen.fill(False)
         self.freq.fill(0)
         self.mean_arr.fill(math.nan)

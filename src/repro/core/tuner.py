@@ -1,4 +1,13 @@
-"""The approximate autotuner.
+"""The approximate autotuner — legacy entry point.
+
+.. deprecated::
+    ``repro.api`` is the supported front-end: ``AutotuneSession`` over a
+    ``SimBackend`` subsumes everything here (plus wall-clock and dry-run
+    backends, process-parallel sweeps, and checkpoint/resume).  This
+    module remains as a thin shim because the golden-report regression
+    and the published benchmarks pin its exact protocol; the measurement
+    logic itself lives in ``repro.api.search`` (drivers) and
+    ``repro.api.backends.SimBackend`` (virtual-machine execution).
 
 Drives a configuration-space search over a study (a set of schedule
 configurations sharing a virtual machine), measuring what the paper
@@ -20,18 +29,19 @@ bound exceeds the incumbent's upper bound.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
-import numpy as np
-
-from repro.simmpi.comm import World
+from repro.api.result import ConfigRecord, StudyResult
+from repro.api.search import exhaustive, measure_config, racing
+from repro.api.space import ConfigPoint, SearchSpace
 from repro.simmpi.costmodel import CostModel, MachineSpec, KNL_STAMPEDE2
-from repro.simmpi.runtime import Runtime
-from .critter import Critter
+
 from .policies import Policy
-from .stats import KernelStats, t_quantile_975
+
+#: historical name for the uniform study report (same class; the api name
+#: is ``StudyResult``)
+StudyReport = StudyResult
 
 
 @dataclass
@@ -41,7 +51,7 @@ class Configuration:
     name: str
     params: dict
     # make_program(world) -> program_factory(rank, world) -> generator
-    make_program: Callable[[World], Callable]
+    make_program: Callable[["World"], Callable]
 
 
 @dataclass
@@ -57,133 +67,56 @@ class Study:
     machine: MachineSpec = KNL_STAMPEDE2
 
 
-@dataclass
-class ConfigRecord:
-    name: str
-    params: dict
-    full_time: float
-    predicted: float
-    rel_error: float
-    comp_error: float
-    selective_cost: float     # wall time paid for this config's trials
-    full_cost: float          # what full execution would have paid
-    executed: int
-    skipped: int
-    predictions: List[float] = field(default_factory=list)
-
-
-@dataclass
-class StudyReport:
-    study: str
-    policy: str
-    tolerance: float
-    records: List[ConfigRecord]
-    full_tuning_time: float
-    selective_tuning_time: float
-
-    @property
-    def speedup(self) -> float:
-        if self.selective_tuning_time <= 0:
-            return math.inf
-        return self.full_tuning_time / self.selective_tuning_time
-
-    @property
-    def mean_error(self) -> float:
-        return float(np.mean([r.rel_error for r in self.records]))
-
-    @property
-    def mean_comp_error(self) -> float:
-        return float(np.mean([r.comp_error for r in self.records]))
-
-    @property
-    def chosen(self) -> ConfigRecord:
-        return min(self.records, key=lambda r: r.predicted)
-
-    @property
-    def true_best(self) -> ConfigRecord:
-        return min(self.records, key=lambda r: r.full_time)
-
-    @property
-    def optimum_quality(self) -> float:
-        """full-execution time of the truly-best config divided by that of
-        the chosen config (1.0 = optimal choice; paper reports >= 0.99)."""
-        return self.true_best.full_time / self.chosen.full_time
-
-    def row(self) -> dict:
-        return {
-            "study": self.study, "policy": self.policy,
-            "tolerance": self.tolerance, "speedup": self.speedup,
-            "mean_error": self.mean_error,
-            "mean_comp_error": self.mean_comp_error,
-            "optimum_quality": self.optimum_quality,
-            "full_time": self.full_tuning_time,
-            "selective_time": self.selective_tuning_time,
-        }
+def space_of_study(study: Study) -> SearchSpace:
+    """Adapt a legacy ``Study`` to the session API's ``SearchSpace``."""
+    return SearchSpace(
+        name=study.name,
+        points=[ConfigPoint(name=c.name, params=c.params,
+                            payload=c.make_program)
+                for c in study.configs],
+        reset_between_configs=study.reset_between_configs,
+        world_size=study.world_size, machine=study.machine)
 
 
 class Autotuner:
-    """Exhaustive (paper) and racing (beyond-paper) searches."""
+    """Exhaustive (paper) and racing (beyond-paper) searches.
+
+    Thin shim over ``repro.api``: builds a ``SimBackend`` run and
+    delegates to the lifted search drivers.  ``world``/``critter``/
+    ``runtime`` stay exposed — benchmarks introspect them.
+    """
 
     def __init__(self, study: Study, policy: Policy, *,
                  trials: int = 3, seed: int = 0, allocation: int = 0,
                  timer: Optional[Callable] = None,
                  cost_model: Optional[CostModel] = None,
                  overhead: float = 1e-6):
+        from repro.api.backends import SimBackend   # avoid import cycle
         self.study = study
         self.policy = policy
         self.trials = trials
-        self.world = World(study.world_size)
-        self.critter = Critter(self.world, policy)
-        if timer is None:
-            cm = cost_model or CostModel(study.machine, allocation=allocation,
-                                         seed=seed)
-            timer = cm.sample
-        self.runtime = Runtime(self.world, self.critter, timer,
-                               seed=seed + 17 * allocation, overhead=overhead)
+        self.space = space_of_study(study)
+        self._run = SimBackend(
+            machine=study.machine, timer=timer, cost_model=cost_model,
+            overhead=overhead).open(self.space, policy, seed=seed,
+                                    allocation=allocation)
+        self.world = self._run.world
+        self.critter = self._run.critter
+        self.runtime = self._run.runtime
 
     # -- exhaustive (the paper's evaluation protocol) -------------------------
 
     def run_config(self, cfg: Configuration) -> ConfigRecord:
-        rt, critter = self.runtime, self.critter
-        prog = cfg.make_program(self.world)
-
-        # full execution performed directly prior to the approximated one
-        # (measures prediction error; does not feed the models)
-        ref = rt.run(prog, force_execute=True, update_stats=False)
-        full_time = ref.wall_time
-        full_comp = ref.crit_comp
-
-        selective_cost = 0.0
-        if self.policy.needs_offline_pass:
-            off = rt.run(prog, force_execute=True, update_stats=True)
-            critter.snapshot_apriori_counts()
-            selective_cost += off.wall_time
-
-        predictions: List[float] = []
-        last = None
-        for _ in range(self.trials):
-            last = rt.run(prog)
-            selective_cost += last.wall_time
-            predictions.append(last.predicted_time)
-
-        predicted = predictions[-1]
-        rel_error = abs(predicted - full_time) / full_time
-        comp_error = (abs(last.crit_comp - full_comp) / full_comp
-                      if full_comp > 0 else 0.0)
-        return ConfigRecord(
-            name=cfg.name, params=cfg.params, full_time=full_time,
-            predicted=predicted, rel_error=rel_error, comp_error=comp_error,
-            selective_cost=selective_cost,
-            full_cost=full_time * self.trials,
-            executed=last.executed, skipped=last.skipped,
-            predictions=predictions)
+        # measure the configuration as passed (it need not belong to the
+        # study — legacy callers probe ad-hoc configs)
+        point = ConfigPoint(name=cfg.name, params=cfg.params,
+                            payload=cfg.make_program)
+        return measure_config(self._run, point, self.policy,
+                              trials=self.trials)
 
     def tune(self) -> StudyReport:
-        records = []
-        for i, cfg in enumerate(self.study.configs):
-            if i > 0 and self.study.reset_between_configs:
-                self.critter.reset_models()
-            records.append(self.run_config(cfg))
+        records, _ = exhaustive(self._run, self.space, self.policy,
+                                trials=self.trials)
         return StudyReport(
             study=self.study.name, policy=self.policy.name,
             tolerance=self.policy.tolerance, records=records,
@@ -194,62 +127,15 @@ class Autotuner:
 
     def tune_racing(self, *, max_rounds: int = 6,
                     min_survivor_trials: int = 2) -> "RacingReport":
-        """Successive elimination driven by the paper's own CIs.
-
-        Each round gives every surviving configuration one selective
-        benchmark; a configuration is pruned once the lower CI bound of its
-        predicted time exceeds the upper CI bound of the incumbent.  The
-        per-kernel statistical machinery is reused verbatim — racing only
-        changes *which* configurations keep getting iterations, exactly the
-        composition the paper suggests with search-space pruning studies.
-        """
-        rt, critter = self.runtime, self.critter
-        cfgs = list(self.study.configs)
-        progs = {c.name: c.make_program(self.world) for c in cfgs}
-        samples: Dict[str, List[float]] = {c.name: [] for c in cfgs}
-        active = {c.name for c in cfgs}
-        cost = 0.0
-        pruned_at: Dict[str, int] = {}
-
-        def ci(name):
-            xs = samples[name]
-            n = len(xs)
-            m = float(np.mean(xs))
-            if n < 2:
-                return m, math.inf
-            hw = t_quantile_975(n - 1) * float(np.std(xs, ddof=1)) / math.sqrt(n)
-            return m, hw
-
-        for rnd in range(max_rounds):
-            for c in cfgs:
-                if c.name not in active:
-                    continue
-                if self.study.reset_between_configs and len(cfgs) > 1:
-                    # racing interleaves configs; resetting would discard
-                    # everything each step — keep models per config name
-                    pass
-                res = rt.run(progs[c.name])
-                cost += res.wall_time
-                samples[c.name].append(res.predicted_time)
-            # prune
-            stats = {nm: ci(nm) for nm in active}
-            inc = min(stats, key=lambda nm: stats[nm][0])
-            inc_hi = stats[inc][0] + stats[inc][1]
-            for nm in list(active):
-                if nm == inc:
-                    continue
-                m, hw = stats[nm]
-                if len(samples[nm]) >= min_survivor_trials and m - hw > inc_hi:
-                    active.remove(nm)
-                    pruned_at[nm] = rnd
-            if len(active) == 1:
-                break
-        best = min(active, key=lambda nm: float(np.mean(samples[nm])))
-        return RacingReport(study=self.study.name, policy=self.policy.name,
-                            tolerance=self.policy.tolerance,
-                            best=best, cost=cost, samples=samples,
-                            pruned_at=pruned_at,
-                            survivors=sorted(active))
+        records, extra = racing(self._run, self.space, self.policy,
+                                max_rounds=max_rounds,
+                                min_survivor_trials=min_survivor_trials)
+        return RacingReport(
+            study=self.study.name, policy=self.policy.name,
+            tolerance=self.policy.tolerance, best=extra["best"],
+            cost=extra["cost"],
+            samples={r.name: r.predictions for r in records},
+            pruned_at=extra["pruned_at"], survivors=extra["survivors"])
 
 
 @dataclass

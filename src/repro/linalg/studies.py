@@ -16,9 +16,10 @@ paper §VI.A/§VI.B); SLATE's and CANDMC's studies reset (§VI.A).
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-from repro.core.tuner import Configuration, Study
+from repro.api.space import SearchSpace
+from repro.core.tuner import Configuration, Study, space_of_study
 from repro.simmpi.costmodel import KNL_STAMPEDE2
 
 from . import capital_cholesky, slate_cholesky, candmc_qr, slate_qr
@@ -113,3 +114,11 @@ STUDIES: Dict[str, callable] = {
     "candmc-qr": candmc_qr_study,
     "slate-qr": slate_qr_study,
 }
+
+
+def search_space(name: str, scale: str = "ci", *,
+                 max_configs: Optional[int] = None) -> SearchSpace:
+    """The session-API view of a paper study: ``search_space
+    ("slate-cholesky")`` feeds ``repro.api.AutotuneSession`` with a
+    ``SimBackend``.  ``max_configs`` truncates for fast CI passes."""
+    return space_of_study(STUDIES[name](scale)).subset(max_configs)

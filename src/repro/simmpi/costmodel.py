@@ -19,6 +19,7 @@ Both plug into the Runtime through the same ``sample(sig, rng)`` interface.
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -128,7 +129,13 @@ class CostModel:
     def _bias_of(self, sig: Signature) -> float:
         v = self._bias.get(sig)
         if v is None:
-            h = (hash(sig) ^ self._bias_seed) & 0xFFFFFFFF
+            # crc32 of the stable string form, NOT hash(): the builtin str
+            # hash is PYTHONHASHSEED-randomized per interpreter, which
+            # would make the bias field differ across processes and break
+            # checkpoint-resumed studies (repro.api session journals) and
+            # any cross-process reproduction of a sweep
+            h = (zlib.crc32(str(sig).encode())
+                 ^ self._bias_seed) & 0xFFFFFFFF
             rng = np.random.default_rng(h)
             v = float(np.exp(rng.normal(0.0, self.bias_sigma)))
             self._bias[sig] = v

@@ -12,6 +12,10 @@ Two scales:
 - ``dryrun_search`` (production mesh, modeled): configurations are ranked
   by the three-term roofline of their compiled dry-run — the search loop
   used for the §Perf hillclimb.
+
+Both are front-ended by ``repro.api.AutotuneSession`` (``WallClockBackend``
+wraps ``SelectiveTimer`` over ``LMStudy.kernels_of``; ``DryRunBackend``
+wraps ``dryrun_search.evaluate_point``) — prefer the session API.
 """
 
 from .selective import SelectiveTimer, TimerReport

@@ -21,17 +21,15 @@ CI shrink.
 from __future__ import annotations
 
 import itertools
-import math
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import ArchConfig, Shape
-from repro.core.policies import Policy
+from repro.configs.base import ArchConfig
 from repro.core.signatures import Signature, comp_sig
 from repro.models import layers as ML
 from repro.models import moe as MM
@@ -227,6 +225,36 @@ class LMStudy:
         for sig, _ in items:
             counts[sig] = counts.get(sig, 0) + 1
         return [(sig, build, counts[sig]) for sig, build in items]
+
+    # -- session-API adapters ----------------------------------------------------
+
+    def kernels_of(self, point):
+        """``WallClockBackend`` provider: resolve a ``ConfigPoint`` (or a
+        bare ``StepKnobs``) to the step's bound kernel occurrence list
+        ``[(Signature, thunk, freq)]``; compilation happens here, outside
+        any timed region."""
+        knobs = getattr(point, "payload", point) or point
+        out = []
+        for sig, build, freq in self.kernel_sequence(knobs):
+            fn, args = self._kernel(sig, build)
+            out.append((sig,
+                        (lambda fn=fn, args=args: fn(*args)), freq))
+        return out
+
+    def search_space(self, max_configs: Optional[int] = None):
+        """The session-API view of this study's StepKnobs space.  Resets
+        follow the policy (eager's persistent models skip the reset), the
+        convention of the measured LM benchmarks."""
+        from repro.api.space import RESET_POLICY, ConfigPoint, SearchSpace
+        pts = [ConfigPoint(name=kn.name, params={
+                   "grad_accum": kn.grad_accum, "remat": kn.remat,
+                   "kv_chunk": kn.kv_chunk, "ssm_chunk": kn.ssm_chunk,
+                   "moe_dispatch": kn.moe_dispatch}, payload=kn)
+               for kn in lm_config_space(self.cfg)]
+        if max_configs is not None:
+            pts = pts[:max_configs]
+        return SearchSpace(name=f"lm-{self.cfg.name}", points=pts,
+                           reset_between_configs=RESET_POLICY)
 
     def run_config(self, knobs: StepKnobs, timer: SelectiveTimer,
                    *, iters: int = 3):

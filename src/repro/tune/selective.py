@@ -1,6 +1,12 @@
 """Selective wall-clock kernel timing — the paper's §III.A machinery over
 real jitted-closure executions (no virtual machine).
 
+This is the measurement substrate of ``repro.api.WallClockBackend``; the
+supported way to drive it is ``repro.api.AutotuneSession`` (see the
+top-level README), which owns the per-configuration protocol, sweeps and
+checkpointing.  Direct ``SelectiveTimer`` use remains for single-kernel
+call sites (e.g. the serving engine's step timer).
+
 All kernels here are computation kernels (one process, XLA dispatch), so
 the propagation policies collapse to how execution *counts* are used:
 

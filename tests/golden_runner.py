@@ -4,8 +4,9 @@ Runs the exhaustive-autotune protocol over tiny versions of the three
 op-mix-distinct case studies (SLATE Cholesky: nonblocking p2p; Capital:
 sub-communicator collectives; CANDMC: blocking p2p + collectives) under all
 five selective-execution policies, with a FULLY DETERMINISTIC cost model
-(``bias_sigma=0`` removes the only hash()-dependent term, so results are
-reproducible across processes without pinning PYTHONHASHSEED).
+(``bias_sigma=0`` removes the allocation-bias term; since PR 2 the bias
+itself is also process-stable — crc32, not ``hash()`` — so even
+bias_sigma>0 studies reproduce across processes and checkpoint resumes).
 
 ``compute_goldens()`` returns a nested dict of every ConfigRecord field.
 ``python -m tests.golden_runner`` (from the repo root, with PYTHONPATH=src)
