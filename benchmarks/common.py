@@ -39,7 +39,9 @@ def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
     mean prediction error, optimum quality.  ``workers=0`` means one per
     CPU."""
     if workers <= 0:
-        workers = max(os.cpu_count() or 1, 1)
+        # floor of 2 so single-core boxes still go through the fork pool
+        # (bit-identical to serial) instead of silently degenerating
+        workers = max(os.cpu_count() or 1, 2)
     session = sweep_session(make_study, trials=trials, scale=scale)
     results = session.sweep(policies=policies, tolerances=eps, seeds=seeds,
                             allocations=allocations, workers=workers,

@@ -4,7 +4,8 @@ Sections:
   1. paper case studies (Figs 4-5 protocol, CI scale)
   2. beyond-paper: racing + extrapolation
   3. LM autotune (the technique on our framework, measured)
-  4. roofline table from the dry-run artifacts (if present)
+  4. cold-vs-warm statistics transfer on Capital (bench_transfer)
+  5. roofline table from the dry-run artifacts (if present)
 
 ``--full`` widens epsilon sweeps and architectures.  ``--paper`` adds the
 paper-scale sweep (real processor counts, checkpointed + process-parallel
@@ -29,7 +30,8 @@ def main(argv=None):
                     help="process-parallel sweep workers (0 = per CPU; "
                          "default: per CPU for --paper, serial otherwise)")
     ap.add_argument("--sections", nargs="*",
-                    default=["case", "beyond", "lm", "roofline"])
+                    default=["case", "beyond", "lm", "transfer",
+                             "roofline"])
     args = ap.parse_args(argv)
     fast = not args.full
     workers = args.workers if args.workers is not None \
@@ -48,6 +50,9 @@ def main(argv=None):
     if "lm" in args.sections:
         from . import bench_lm_autotune
         bench_lm_autotune.run(fast=fast)
+    if "transfer" in args.sections:
+        from . import bench_transfer
+        bench_transfer.run(trials=2 if fast else 3)
     if "roofline" in args.sections:
         try:
             from . import roofline

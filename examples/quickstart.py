@@ -20,7 +20,9 @@ from repro.linalg.studies import search_space
 
 def main():
     tol = 0.25
-    workers = min(len(POLICIES), os.cpu_count() or 1)
+    # floor of 2: a single-core box should still demonstrate (and
+    # exercise) the fork-parallel sweep path rather than degenerate serial
+    workers = max(2, min(len(POLICIES), os.cpu_count() or 1))
     print(f"autotuning Capital Cholesky (15 configs, 64 virtual ranks), "
           f"tolerance {tol}, {workers} workers\n")
     session = AutotuneSession(search_space("capital-cholesky"),

@@ -91,3 +91,59 @@ for r in serial:
 print(f"OK: session API serial == 2-worker "
       f"({[round(r.speedup, 2) for r in serial]} speedups)")
 EOF
+
+echo "== transfer smoke (cold -> bank -> warm) =="
+python - <<'EOF'
+import sys
+
+sys.path.insert(0, "tests")
+from repro.api import AutotuneSession, SimBackend, StatisticsBank
+from repro.core.tuner import space_of_study
+from golden_runner import _studies
+
+space = space_of_study(_studies()[1])       # tiny Capital study, world 8
+
+def session(**kw):
+    return AutotuneSession(space, backend=SimBackend(), policy="eager",
+                           tolerance=0.25, trials=2, **kw)
+
+cold = session(collect_stats=True).run()
+bank = cold.stats_bank()
+if not bank:
+    print("FAIL: cold study harvested an empty statistics bank")
+    sys.exit(1)
+# the bank must survive a JSON round trip before it seeds anything
+bank = StatisticsBank.from_json(bank.to_json())
+warm = session(prior=bank).run()
+cold_exec = sum(r.executed for r in cold.records)
+warm_exec = sum(r.executed for r in warm.records)
+if warm.chosen.name != cold.chosen.name:
+    print(f"FAIL: warm study chose {warm.chosen.name!r}, "
+          f"cold chose {cold.chosen.name!r}")
+    sys.exit(1)
+if warm_exec >= cold_exec:
+    print(f"FAIL: warm study executed {warm_exec} kernel invocations "
+          f"(cold: {cold_exec}) — transfer bought nothing")
+    sys.exit(1)
+print(f"OK: warm run kept winner {cold.chosen.name!r}, executed "
+      f"{cold_exec} -> {warm_exec} kernel invocations")
+EOF
+
+echo "== hypothesis property-suite guard =="
+# the core-stats property tests are optional-dep-guarded; if hypothesis IS
+# available they must actually run — a skip then means the guard rotted.
+if python -c "import hypothesis" 2>/dev/null; then
+    out=$(python -m pytest tests/test_core_stats.py -q -rs) || {
+        echo "$out"; exit 1; }
+    echo "$out" | tail -n 3
+    if printf '%s' "$out" | grep -qi "skipped"; then
+        echo "FAIL: hypothesis is installed but the core-stats property"
+        echo "      suite skipped tests anyway:"
+        printf '%s\n' "$out" | grep -i skip
+        exit 1
+    fi
+    echo "OK: property suite ran under hypothesis with no skips"
+else
+    echo "hypothesis not installed: hypothesis-driven cases skip by design"
+    echo "(the seeded-fallback property tests still run in tier-1)"
+fi

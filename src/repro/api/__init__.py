@@ -27,14 +27,16 @@ from .backends import (Backend, BackendRun, DryRunBackend, Measurement,
                        SimBackend, WallClockBackend, dryrun_space)
 from .result import ConfigRecord, StudyResult
 from .search import SEARCHES, exhaustive, measure_config, racing
-from .serialize import from_jsonable, to_jsonable
+from .serialize import dumps_canonical, from_jsonable, to_jsonable
 from .session import AutotuneSession
 from .space import RESET_POLICY, ConfigPoint, SearchSpace
+from .transfer import StatisticsBank
 
 __all__ = [
     "AutotuneSession", "Backend", "BackendRun", "ConfigPoint",
     "ConfigRecord", "DryRunBackend", "Measurement", "RESET_POLICY",
-    "SEARCHES", "SearchSpace", "SimBackend", "StudyResult",
-    "WallClockBackend", "dryrun_space", "exhaustive", "from_jsonable",
-    "measure_config", "racing", "to_jsonable",
+    "SEARCHES", "SearchSpace", "SimBackend", "StatisticsBank",
+    "StudyResult", "WallClockBackend", "dryrun_space", "dumps_canonical",
+    "exhaustive", "from_jsonable", "measure_config", "racing",
+    "to_jsonable",
 ]

@@ -26,6 +26,12 @@ sequence (§VI.A), which the search drivers orchestrate:
                      policy's charged offline pass);
 - ``run_trial``      one selective execution;
 - ``reset_models``   forget kernel statistics (between configurations).
+
+Cross-study transfer (``repro.api.transfer``): ``open(..., prior=bank)``
+seeds the run's statistical state from a ``StatisticsBank`` so confident
+kernels start in the skip regime (re-seeded after every model reset), and
+``export_stats()`` harvests the run's accumulated per-kernel posteriors —
+including statistics gathered before resets — as a bank payload.
 """
 
 from __future__ import annotations
@@ -74,6 +80,12 @@ class BackendRun:
             raise NotImplementedError(
                 f"{type(self).__name__} cannot restore carry state")
 
+    def export_stats(self) -> Optional[dict]:
+        """Bank payload (``StatisticsBank.to_json`` shape) of every kernel
+        statistic this run accumulated, pooled across ranks and across
+        model resets.  ``None`` when the backend keeps no statistics."""
+        return None
+
     def reset_models(self) -> None:
         raise NotImplementedError
 
@@ -106,7 +118,12 @@ class Backend:
         return {"name": self.name}
 
     def open(self, space: SearchSpace, policy: Policy, *,
-             seed: int = 0, allocation: int = 0) -> BackendRun:
+             seed: int = 0, allocation: int = 0,
+             prior=None) -> BackendRun:
+        """Build the per-(study, policy) execution context.  ``prior`` is
+        an optional ``repro.api.transfer.StatisticsBank`` (already
+        discounted by the session); backends without statistical state
+        (dry run) ignore it."""
         raise NotImplementedError
 
 
@@ -140,16 +157,18 @@ class SimBackend(Backend):
                 else "default"}
 
     def open(self, space: SearchSpace, policy: Policy, *,
-             seed: int = 0, allocation: int = 0) -> "SimRun":
+             seed: int = 0, allocation: int = 0,
+             prior=None) -> "SimRun":
         return SimRun(space, policy, machine=self.machine,
                       timer=self.timer, cost_model=self.cost_model,
                       overhead=self.overhead, seed=seed,
-                      allocation=allocation)
+                      allocation=allocation, prior=prior)
 
 
 class SimRun(BackendRun):
     def __init__(self, space: SearchSpace, policy: Policy, *, machine,
-                 timer, cost_model, overhead, seed: int, allocation: int):
+                 timer, cost_model, overhead, seed: int, allocation: int,
+                 prior=None):
         # local imports keep repro.api importable without the sim stack
         from repro.core.critter import Critter
         from repro.simmpi.comm import World
@@ -159,9 +178,16 @@ class SimRun(BackendRun):
         if not space.world_size:
             raise ValueError(f"space {space.name!r} has no world_size; "
                              "SimBackend needs a virtual machine size")
+        from repro.api.transfer import Harvest
+
         self.policy = policy
         self.world = World(space.world_size)
         self.critter = Critter(self.world, policy)
+        if prior:
+            self.critter.set_prior(prior.resolver(self.world.size))
+        # transfer harvest: measured statistics accumulated across model
+        # resets, prior-deduplicated (see transfer.Harvest)
+        self._harvest = Harvest(self.world.size, prior)
         if timer is None:
             cm = cost_model or CostModel(
                 machine or space.machine or KNL_STAMPEDE2,
@@ -199,7 +225,12 @@ class SimRun(BackendRun):
         if state is not None:
             self.runtime._rng.bit_generator.state = state["rng"]
 
+    def export_stats(self) -> dict:
+        return self._harvest.payload(self.critter.pooled_kbar())
+
     def reset_models(self) -> None:
+        # bank measured statistics before they are forgotten
+        self._harvest.add(self.critter.pooled_kbar())
         self.critter.reset_models()
 
     def run_reference(self, point: ConfigPoint) -> Measurement:
@@ -241,18 +272,32 @@ class WallClockBackend(Backend):
                 "clock": "custom" if self.clock is not None else "default"}
 
     def open(self, space: SearchSpace, policy: Policy, *,
-             seed: int = 0, allocation: int = 0) -> "WallClockRun":
-        return WallClockRun(self.kernels_of, policy, clock=self.clock)
+             seed: int = 0, allocation: int = 0,
+             prior=None) -> "WallClockRun":
+        return WallClockRun(self.kernels_of, policy, clock=self.clock,
+                            prior=prior)
 
 
 class WallClockRun(BackendRun):
-    def __init__(self, kernels_of, policy: Policy, *, clock=None):
+    def __init__(self, kernels_of, policy: Policy, *, clock=None,
+                 prior=None):
+        from repro.api.transfer import Harvest
         from repro.tune.selective import SelectiveTimer
         self.policy = policy
-        self.timer = SelectiveTimer(policy, clock=clock)
+        # wall-clock studies are single-process compute-kernel streams:
+        # structural keys carry no communicator geometry, so the bank
+        # resolves (and harvests) against a world of 1
+        self.timer = SelectiveTimer(
+            policy, clock=clock,
+            prior_lookup=prior.resolver(1) if prior else None)
         self.kernels_of = kernels_of
+        self._harvest = Harvest(1, prior)
+
+    def export_stats(self) -> dict:
+        return self._harvest.payload(self.timer.kbar)
 
     def reset_models(self) -> None:
+        self._harvest.add(self.timer.kbar)
         self.timer.reset_models()
 
     def run_reference(self, point: ConfigPoint) -> Measurement:
@@ -306,7 +351,9 @@ class DryRunBackend(Backend):
                 "multi_pod": self.multi_pod}
 
     def open(self, space: SearchSpace, policy: Policy, *,
-             seed: int = 0, allocation: int = 0) -> "DryRunRun":
+             seed: int = 0, allocation: int = 0,
+             prior=None) -> "DryRunRun":
+        # a pure cost model keeps no kernel statistics: priors are inert
         return DryRunRun(self)
 
 

@@ -124,6 +124,16 @@ class StudyResult:
             return math.nan
         return self.true_best.full_time / chosen
 
+    def stats_bank(self):
+        """The per-kernel statistics bank a ``collect_stats=True`` session
+        attached to this result (``None`` when the study did not collect)
+        — feed it to a later session as ``prior=`` (see
+        ``repro.api.transfer``)."""
+        if "kernel_stats" not in self.extra:
+            return None
+        from .transfer import StatisticsBank
+        return StatisticsBank.from_result(self)
+
     def row(self) -> dict:
         return {
             "study": self.study, "policy": self.policy,

@@ -17,12 +17,25 @@ than silently degrading to ``str``.
 
 from __future__ import annotations
 
+import json
 import math
 from typing import Any
 
 import numpy as np
 
 _FLOAT_TAGS = {"inf": math.inf, "-inf": -math.inf, "nan": math.nan}
+
+
+def dumps_canonical(v: Any) -> str:
+    """One canonical JSON string per value: tagged encoding, sorted keys.
+    This is the identity form shared by session checkpoint keys and
+    statistics-bank fingerprints — two values compare equal iff their
+    canonical strings do.  The separators are json.dumps's defaults ON
+    PURPOSE: for JSON-native values this reproduces the historical
+    ``json.dumps(key, sort_keys=True)`` checkpoint-key format byte for
+    byte, so journals written before this helper existed keep
+    resolving."""
+    return json.dumps(to_jsonable(v), sort_keys=True)
 
 
 def to_jsonable(v: Any) -> Any:

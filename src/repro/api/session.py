@@ -25,6 +25,19 @@ deterministic task order) and optionally checkpointed (``checkpoint=
 path``: completed sweep points — and completed configurations inside a
 resumable exhaustive study — are journaled to JSON and skipped on
 re-run, so long paper-scale sweeps survive interruption).
+
+Cross-study transfer (``repro.api.transfer``): ``collect_stats=True``
+attaches the study's per-kernel statistics bank to
+``StudyResult.extra["kernel_stats"]``; ``prior=bank`` (optionally
+weakened by ``prior_discount``) seeds a later session's models from it,
+so already-confident kernels start in the skip regime.  A warm study's
+exported bank folds the transferred prior back in exactly once —
+measured evidence is harvested prior-free across model resets
+(``transfer.Harvest``), so chained warm-starts do not compound
+transferred confidence.  A study resumed mid-way from a checkpoint
+exports no bank (the journaled configurations never fed its models).
+Priors fingerprint into checkpoint keys: journaled warm results are
+never replayed as cold ones (or under a different bank).
 """
 
 from __future__ import annotations
@@ -42,6 +55,7 @@ from . import search as _search
 from .backends import Backend
 from .parallel import run_tasks
 from .result import StudyResult
+from .serialize import dumps_canonical
 from .space import SearchSpace
 
 _DRIVERS = {"exhaustive": _search.exhaustive, "racing": _search.racing}
@@ -56,6 +70,8 @@ class AutotuneSession:
                  search: str = "exhaustive", trials: int = 3,
                  seed: int = 0, allocation: int = 0,
                  search_options: Optional[dict] = None,
+                 prior=None, prior_discount: float = 0.5,
+                 collect_stats: bool = False,
                  **policy_kwargs):
         if search not in _DRIVERS:
             raise ValueError(f"unknown search {search!r}; "
@@ -67,6 +83,12 @@ class AutotuneSession:
         self.seed = seed
         self.allocation = allocation
         self.search_options = dict(search_options or {})
+        # cross-study transfer: the discount is applied once, here, so the
+        # checkpoint fingerprint below reflects the evidence actually
+        # seeded; an empty (or None) prior is exactly a cold session
+        self.prior = prior.discounted(prior_discount) \
+            if prior is not None and len(prior) else None
+        self.collect_stats = bool(collect_stats)
         if isinstance(policy, Policy):
             self._base_policy = policy if tolerance is None \
                 else replace(policy, tolerance=tolerance)
@@ -92,18 +114,25 @@ class AutotuneSession:
     # -- one study -----------------------------------------------------------
 
     def _key(self, pol: Policy, seed: int, allocation: int) -> dict:
-        return {"space": self.space.name, "n_points": len(self.space),
-                "backend": self.backend.fingerprint(),
-                "policy": pol.name,
-                "tolerance": pol.tolerance, "trials": self.trials,
-                "search": self.search, "seed": seed,
-                "allocation": allocation}
+        key = {"space": self.space.name, "n_points": len(self.space),
+               "backend": self.backend.fingerprint(),
+               "policy": pol.name,
+               "tolerance": pol.tolerance, "trials": self.trials,
+               "search": self.search, "seed": seed,
+               "allocation": allocation}
+        # only non-default transfer settings enter the key, so existing
+        # cold checkpoints keep resolving under their original identity
+        if self.prior is not None:
+            key["prior"] = self.prior.fingerprint()
+        if self.collect_stats:
+            key["collect_stats"] = True
+        return key
 
     def _run_one(self, pol: Policy, seed: int, allocation: int, *,
                  checkpoint: Optional["_Checkpoint"] = None) -> StudyResult:
         t0 = time.time()
         run = self.backend.open(self.space, pol, seed=seed,
-                                allocation=allocation)
+                                allocation=allocation, prior=self.prior)
         driver = _DRIVERS[self.search]
         opts = dict(self.search_options)
         key = self._key(pol, seed, allocation)
@@ -124,6 +153,16 @@ class AutotuneSession:
                 key, rec, run.carry_state())
         records, extra = driver(run, self.space, pol, trials=self.trials,
                                 **opts)
+        if self.collect_stats and not start:
+            # configurations replayed from a checkpoint journal never fed
+            # this run's models, so a resumed study cannot export the full
+            # posterior — omit the bank rather than present a partial one
+            # (resume the study without collect_stats, or re-run cold, to
+            # obtain a complete bank)
+            bank = run.export_stats()
+            if bank is not None:
+                extra = dict(extra)
+                extra["kernel_stats"] = bank
         result = StudyResult(
             study=self.space.name, policy=pol.name,
             tolerance=pol.tolerance, records=records,
@@ -228,7 +267,9 @@ class _Checkpoint:
 
     @staticmethod
     def _k(key: dict) -> str:
-        return json.dumps(key, sort_keys=True)
+        # one canonical identity string per key (shared with bank
+        # fingerprints); tolerates tuples/NumPy scalars in key values
+        return dumps_canonical(key)
 
     def _flush(self) -> None:
         d = os.path.dirname(os.path.abspath(self.path))

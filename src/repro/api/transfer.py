@@ -1,0 +1,294 @@
+"""Cross-study statistics transfer: warm-started sessions.
+
+The paper's entire speed-up comes from per-kernel statistical profiles
+crossing the predictability threshold; a fresh ``AutotuneSession`` rebuilds
+every profile from zero even when a prior study on a neighboring problem
+size, tolerance, or policy already measured the same kernel signatures.
+This module closes that loop:
+
+1. a completed study exports its per-kernel ``KernelStats`` posteriors
+   (``AutotuneSession(..., collect_stats=True)`` attaches them to
+   ``StudyResult.extra["kernel_stats"]``);
+2. a ``StatisticsBank`` holds those posteriors keyed by *structural
+   signature keys* (``core.signatures.structural_key``) — world-independent
+   identities, so a bank recorded at one processor count matches
+   signatures interned by a different world;
+3. ``AutotuneSession(..., prior=bank)`` seeds the backend's statistical
+   state so already-confident kernels start in the skip regime: eager
+   sessions switch them off machine-wide outright, once-per-iteration
+   policies skip every occurrence after the mandatory first execution —
+   from trial one instead of after ``min_samples`` rebuild executions.
+
+Trust control:
+
+- ``bank.discounted(f)`` (applied by the session's ``prior_discount``)
+  keeps each transferred mean/variance but carries only ``f`` of the
+  evidence, widening the CI so stale banks re-earn confidence;
+- ``bank.remapped(target)`` is a Gaussian-copula-style quantile remap
+  between the source and target sample distributions (the
+  transfer-learning direction of Randall et al.): a monotone CDF map with
+  Gaussian marginals reduces to the z-score affine map, so kernels
+  measured in BOTH banks adopt the target's marginal while pooling both
+  banks' evidence, and source-only kernels are rescaled through a global
+  log-space fit of the matched pairs — transferring across machines or
+  allocations whose timings differ by a systematic factor.
+
+Banks merge (``StatisticsBank.merge``), round-trip losslessly through
+JSON (``to_json``/``from_json``, ``save``/``load``), and fingerprint into
+session checkpoint keys so warm results are never replayed as cold ones.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.signatures import Signature, structural_key
+from repro.core.stats import KernelStats
+
+from .serialize import dumps_canonical
+
+BANK_VERSION = 1
+
+
+class Harvest:
+    """Accumulates a backend run's measured kernel statistics into bank
+    form, across model resets, without re-banking a seeded prior.
+
+    ``add`` folds a pooled per-signature table in (two signatures may
+    share one structural key — e.g. two sub-communicators of the same
+    relative shape — and Chan-merge).  When the run was warm-started, each
+    seeded kernel's table entry is ``merge(prior, new samples)``; ``add``
+    strips the prior via ``KernelStats.minus`` so that repeated harvests
+    (one per reset) bank only the *measured* evidence — the prior itself
+    re-enters the exported payload exactly once, keeping chained
+    warm-starts from compounding transferred confidence.  (Under eager
+    cross-rank aggregation the subtraction is approximate: merged tables
+    carry one prior copy per participant, matching eager's per-rank
+    counting of real samples.)
+    """
+
+    def __init__(self, world_size: int, prior: "StatisticsBank" = None):
+        self.world_size = world_size
+        self._prior = prior.entries if prior else {}
+        self._acc: Dict[str, KernelStats] = {}
+
+    def add(self, pooled: Dict[Signature, KernelStats],
+            into: Optional[Dict[str, KernelStats]] = None) -> None:
+        acc = self._acc if into is None else into
+        for sig, st in pooled.items():
+            if st.n == 0:
+                continue
+            key = structural_key(sig, self.world_size)
+            p = self._prior.get(key)
+            if p is not None:
+                st = st.minus(p)
+                if st is None:         # nothing beyond the seeded prior
+                    continue
+            got = acc.get(key)
+            if got is None:
+                acc[key] = st.copy()
+            else:
+                got.merge(st)
+
+    def payload(self, pooled_now: Dict[Signature, KernelStats]) -> dict:
+        """Bank JSON of everything harvested so far plus the live table,
+        with the seeded prior folded back in once."""
+        out = {k: v.copy() for k, v in self._acc.items()}
+        self.add(pooled_now, into=out)
+        for key, p in self._prior.items():
+            got = out.get(key)
+            if got is None:
+                out[key] = p.copy()
+            else:
+                got.merge(p)
+        return StatisticsBank(out).to_json()
+
+
+class StatisticsBank:
+    """Per-kernel ``KernelStats`` posteriors keyed by structural keys."""
+
+    def __init__(self, entries: Optional[Dict[str, KernelStats]] = None,
+                 *, meta: Optional[List[dict]] = None):
+        self.entries: Dict[str, KernelStats] = dict(entries or {})
+        #: provenance rows ({study, policy, tolerance, world_size, ...});
+        #: informational only — never consulted by matching
+        self.meta: List[dict] = list(meta or [])
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __bool__(self) -> bool:        # an empty bank is a no-op prior
+        return bool(self.entries)
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_result(cls, result) -> "StatisticsBank":
+        """Extract the bank a ``collect_stats=True`` session attached to a
+        ``StudyResult`` (raises KeyError when the study did not collect)."""
+        payload = result.extra["kernel_stats"]
+        bank = cls.from_json(payload)
+        if not bank.meta:
+            bank.meta = [{"study": result.study, "policy": result.policy,
+                          "tolerance": result.tolerance,
+                          "backend": result.backend}]
+        return bank
+
+    def merge(self, other: "StatisticsBank") -> "StatisticsBank":
+        """Key-wise Chan-merged union of two banks (new bank; sources
+        untouched).  Structural keys are world-independent, so banks from
+        different machine geometries merge directly."""
+        out: Dict[str, KernelStats] = {k: v.copy()
+                                       for k, v in self.entries.items()}
+        for k, st in other.entries.items():
+            acc = out.get(k)
+            if acc is None:
+                out[k] = st.copy()
+            else:
+                acc.merge(st)
+        return StatisticsBank(out, meta=self.meta + other.meta)
+
+    def discounted(self, factor: float) -> "StatisticsBank":
+        """Evidence-discounted copy (see ``KernelStats.discounted``);
+        entries whose discounted sample count reaches zero are dropped."""
+        if factor >= 1.0:
+            return self
+        out = {}
+        for k, st in self.entries.items():
+            d = st.discounted(factor)
+            if d.n > 0:
+                out[k] = d
+        return StatisticsBank(
+            out, meta=self.meta + [{"discount": factor}])
+
+    # -- Gaussian-copula-style quantile remap --------------------------------
+
+    def remapped(self, target: "StatisticsBank", *,
+                 min_matches: int = 3) -> "StatisticsBank":
+        """Remap this (source) bank onto ``target``'s sample distributions.
+
+        For each kernel present in both banks, the source distribution is
+        pushed through the monotone quantile map source-CDF -> uniform ->
+        target-CDF.  With Gaussian marginals that map is the affine z-score
+        transform, so the remapped kernel carries the TARGET's marginal
+        (mean/variance/extremes) while pooling both banks' sample counts —
+        the copula transfer: confidence structure from the source, marginal
+        from the target.
+
+        Source-only kernels are rescaled through a global log-space
+        least-squares fit ``log t_target = a * log t_source + b`` over the
+        matched pairs' means (a plain median mean-ratio below
+        ``min_matches`` pairs; identity with no matches), then
+        evidence-kept via ``KernelStats.scaled``.  Target-only kernels pass
+        through unchanged.
+        """
+        src, tgt = self.entries, target.entries
+        matched = [k for k in src if k in tgt
+                   and src[k].mean > 0 and tgt[k].mean > 0]
+        out: Dict[str, KernelStats] = {}
+        for k in matched:
+            s, t = src[k], tgt[k]
+            n = t.n + s.n
+            var = t.variance
+            if not math.isfinite(var):
+                # target too thin for a variance: borrow the source's
+                # relative spread at the target's location
+                svar = s.variance
+                var = svar * (t.mean / s.mean) ** 2 \
+                    if math.isfinite(svar) else 0.0
+            out[k] = KernelStats.from_moments(n, t.mean, var,
+                                              min(t.min_t, t.mean),
+                                              max(t.max_t, t.mean))
+        a, b = _fit_loglinear([(src[k].mean, tgt[k].mean) for k in matched],
+                              min_matches)
+        for k, s in src.items():
+            if k in out:
+                continue
+            scale = math.exp(a * math.log(s.mean) + b) / s.mean \
+                if s.mean > 0 else 1.0
+            out[k] = s.scaled(scale)
+        for k, t in tgt.items():
+            if k not in out:
+                out[k] = t.copy()
+        return StatisticsBank(out, meta=self.meta + target.meta +
+                              [{"remap": {"a": a, "b": b,
+                                          "matched": len(matched)}}])
+
+    # -- session-side resolution ---------------------------------------------
+
+    def resolver(self, world_size: int
+                 ) -> Callable[[Signature], Optional[KernelStats]]:
+        """A ``Signature -> KernelStats-or-None`` lookup for a target study
+        at ``world_size`` ranks.  Every hit returns a fresh copy (two
+        signatures may resolve to one entry and must not share state)."""
+        entries = self.entries
+        memo: Dict[Signature, Optional[KernelStats]] = {}
+
+        def lookup(sig: Signature) -> Optional[KernelStats]:
+            st = memo.get(sig, False)
+            if st is False:
+                st = memo[sig] = entries.get(structural_key(sig, world_size))
+            return st.copy() if st is not None else None
+
+        return lookup
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": BANK_VERSION,
+                "entries": {k: self.entries[k].to_json()
+                            for k in sorted(self.entries)},
+                "meta": self.meta}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "StatisticsBank":
+        if d.get("version", BANK_VERSION) != BANK_VERSION:
+            raise ValueError(
+                f"statistics bank version {d.get('version')!r} "
+                f"unsupported (want {BANK_VERSION})")
+        return cls({k: KernelStats.from_json(v)
+                    for k, v in d["entries"].items()},
+                   meta=list(d.get("meta", [])))
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "StatisticsBank":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    def fingerprint(self) -> str:
+        """Content hash for session checkpoint keys: a journaled result
+        produced under one prior must never be replayed under another."""
+        payload = dumps_canonical(
+            {"entries": {k: v.to_json() for k, v in self.entries.items()}})
+        return f"bank:{zlib.crc32(payload.encode()):08x}:{len(self.entries)}"
+
+
+def _fit_loglinear(pairs: List[Tuple[float, float]],
+                   min_matches: int) -> Tuple[float, float]:
+    """log-space least squares through (source mean, target mean) pairs;
+    degrades to a median-ratio shift, then to identity."""
+    if not pairs:
+        return 1.0, 0.0
+    logs = [(math.log(s), math.log(t)) for s, t in pairs]
+    if len(logs) < max(min_matches, 2):
+        ratios = sorted(lt - ls for ls, lt in logs)
+        return 1.0, ratios[len(ratios) // 2]
+    n = len(logs)
+    mx = sum(ls for ls, _ in logs) / n
+    my = sum(lt for _, lt in logs) / n
+    sxx = sum((ls - mx) ** 2 for ls, _ in logs)
+    if sxx <= 0.0:
+        return 1.0, my - mx
+    sxy = sum((ls - mx) * (lt - my) for ls, lt in logs)
+    a = sxy / sxx
+    return a, my - a * mx

@@ -114,11 +114,68 @@ class Critter:
         # live id -> Signature list (append-only, shared with the world's
         # interner — the runtime interns into the same table)
         self._sigs = world.interner.sigs
+        # cross-study transfer: resolver Signature -> KernelStats-or-None
+        # (repro.api.transfer); consumed lazily as signatures are interned
+        self._prior_lookup = None
+        self._prior_upto = 0
 
     # ------------------------------------------------------------------ state
 
+    def set_prior(self, lookup) -> None:
+        """Install a transferred-statistics prior.  ``lookup(sig)`` returns
+        an installable ``KernelStats`` (already discounted/remapped by the
+        bank) or ``None``.  Seeding is lazy: signatures are interned by the
+        runtime as programs first execute, so ``begin_iteration`` tops up
+        the seed over any ids that appeared since — by the first selective
+        trial (which follows a full reference execution) every kernel of
+        the configuration carries its prior.  ``reset_models`` re-arms the
+        seed, so studies that reset statistics between configurations warm
+        every configuration, not just the first."""
+        self._prior_lookup = lookup
+        self._prior_upto = 0
+
+    def _seed_prior(self) -> None:
+        sigs = self._sigs
+        lookup = self._prior_lookup
+        S = self.state
+        n_ranks = S.n_ranks
+        eager = self._eager
+        while self._prior_upto < len(sigs):
+            sid = self._prior_upto
+            self._prior_upto += 1
+            st = lookup(sigs[sid])
+            if st is None or st.n == 0:
+                continue
+            if sid >= S.cap:
+                S.ensure(sid)
+            for r in range(n_ranks):
+                kb = S.kbar[r]
+                if sid in kb:           # posterior beats prior: keep it
+                    continue
+                inst = kb[sid] = st.copy()
+                S.mean_arr[r, sid] = inst.mean
+                if eager:
+                    self._note_stats(r, sid, inst)
+            # an already-confident prior starts the kernel in the skip
+            # regime.  For eager the bank stands in for a completed global
+            # aggregation (its statistics came from a finished study), so
+            # the kernel is switched off machine-wide outright; the
+            # once-per-iteration policies keep their mandatory first
+            # execution and skip every later occurrence from trial one.
+            if eager and sid not in self.global_off \
+                    and st.n >= self._ms \
+                    and st.is_predictable(self._tol, 1, self._ms):
+                self.global_off.add(sid)
+                self.global_stats[sid] = st.copy()
+                S.goff[sid] = True
+                S.gmean[sid] = st.mean
+                for r in range(n_ranks):
+                    S.pred_live[r].discard(sid)
+
     def begin_iteration(self, *, force_execute=False, update_stats=True):
         self.state.reset_iteration()
+        if self._prior_lookup is not None:
+            self._seed_prior()
         self.force_execute = force_execute
         self.update_stats = update_stats
         if self.extrapolator is not None:
@@ -157,6 +214,7 @@ class Critter:
         self.global_off = set()
         self.global_stats = {}
         self.apriori_counts = None
+        self._prior_upto = 0       # re-arm transferred priors (set_prior)
 
     # -------------------------------------------------------------- decisions
 

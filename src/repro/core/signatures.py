@@ -9,6 +9,7 @@ communicator, with point-to-point treated as a size-2 sub-communicator.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
@@ -110,6 +111,46 @@ def _bucket(nbytes: int) -> int:
     if nbytes <= 0:
         return 0
     return 1 << (int(nbytes - 1).bit_length())
+
+
+def structural_key(sig: Signature, world_size: int) -> str:
+    """World-independent identity of a kernel signature, for cross-study
+    statistics transfer (``repro.api.transfer``).
+
+    Two studies only share a ``Signature`` object space per interner, and a
+    comm signature's ``(comm_size, comm_stride)`` is meaningful only
+    relative to its own world.  The structural key normalizes that away so
+    banks built on one machine geometry can seed another:
+
+    - compute kernels are already world-independent: the key is the
+      compact ``str(sig)`` form (routine + dims/flags);
+    - communication kernels keep the power-of-two byte bucket and express
+      cartesian sub-communicators as *fractions of the world*:
+      ``comm_size / world_size`` and (for strided channels) ``comm_stride
+      / world_size`` as reduced fractions, with stride 1 (contiguous
+      fiber) kept verbatim.  A full-world bcast therefore matches a
+      full-world bcast at any processor count, and a strided fiber
+      matches the same relative grid shape.  Stride 0 marks p2p and
+      non-cartesian rank sets, whose sizes are absolute (a pairwise
+      exchange is a pairwise exchange at any world size) and are kept
+      verbatim.
+
+    Keys are plain strings (stable, log-friendly, JSON-dict-ready).
+    """
+    if sig.kind != "comm":
+        return str(sig)
+    nbytes, size, stride = sig.params
+    w = max(int(world_size), 1)
+
+    def frac(x: int) -> str:
+        g = math.gcd(int(x), w) or 1
+        num, den = int(x) // g, w // g
+        return str(num) if den == 1 else f"{num}/{den}"
+
+    if stride == 0:        # p2p / non-cartesian: absolute size
+        return f"comm:{sig.name}(b{nbytes},s{size},t0)"
+    s = "1" if stride == 1 else frac(stride)
+    return f"comm:{sig.name}(b{nbytes},s{frac(size)},t{s})"
 
 
 def flops_of(sig: Signature) -> float:

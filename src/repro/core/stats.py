@@ -166,3 +166,82 @@ class KernelStats:
     def copy(self) -> "KernelStats":
         return KernelStats(self.n, self.mean, self.m2, self.total,
                            self.min_t, self.max_t)
+
+    # -- transfer / serialization -------------------------------------------
+    #
+    # The sufficient statistics (n, mean, m2) plus the reporting extras
+    # (total, min, max) fully determine every derived quantity above, so a
+    # bank of exported KernelStats can re-enter a later study as a prior
+    # (repro.api.transfer) with nothing lost.  The memo caches are NOT
+    # exported: they are keyed on n and rebuild on first use.
+
+    def to_json(self) -> dict:
+        d = {"n": int(self.n), "mean": float(self.mean),
+             "m2": float(self.m2), "total": float(self.total)}
+        if self.n > 0:          # min_t is +inf until the first sample
+            d["min"] = float(self.min_t)
+            d["max"] = float(self.max_t)
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "KernelStats":
+        n = int(d["n"])
+        return cls(n, float(d["mean"]), float(d["m2"]), float(d["total"]),
+                   float(d["min"]) if n > 0 else math.inf,
+                   float(d["max"]) if n > 0 else 0.0)
+
+    @classmethod
+    def from_moments(cls, n: int, mean: float, variance: float,
+                     min_t: float = None, max_t: float = None
+                     ) -> "KernelStats":
+        """Build the sufficient statistics of an n-sample stream with the
+        given mean and (unbiased) variance — the synthesis direction of the
+        copula remap, where a transferred marginal replaces the raw
+        samples."""
+        m2 = variance * (n - 1) if n >= 2 and math.isfinite(variance) \
+            else 0.0
+        return cls(n, mean, m2, mean * n,
+                   mean if min_t is None else min_t,
+                   mean if max_t is None else max_t)
+
+    def discounted(self, factor: float) -> "KernelStats":
+        """A weakened copy carrying ``factor`` of the evidence: the mean and
+        variance are preserved but the effective sample count shrinks, so a
+        transferred prior widens its CI (and re-crosses the predictability
+        threshold) unless the source really was confident.  ``factor >= 1``
+        returns a plain copy; a prior discounted to n < 1 carries no
+        evidence (n = 0)."""
+        if factor >= 1.0:
+            return self.copy()
+        n = int(self.n * factor)
+        if n <= 0:
+            return KernelStats()
+        return KernelStats.from_moments(n, self.mean, self.variance,
+                                        self.min_t, self.max_t)
+
+    def minus(self, prior: "KernelStats") -> "Optional[KernelStats]":
+        """Approximate inverse of ``merge``: the sufficient statistics of
+        the samples in ``self`` beyond those of ``prior`` (assuming ``self
+        == merge(prior, delta)``).  Used by the transfer harvest so a
+        seeded prior's evidence is not re-banked on every model reset.
+        Returns ``None`` when there is nothing beyond the prior; min/max
+        are kept from ``self`` (extremes cannot be un-merged)."""
+        nd = self.n - prior.n
+        if nd <= 0:
+            return None
+        total = self.total - prior.total
+        mean = (self.n * self.mean - prior.n * prior.mean) / nd
+        d = mean - prior.mean
+        m2 = self.m2 - prior.m2 - d * d * prior.n * nd / self.n
+        if m2 < 0.0:                   # float cancellation guard
+            m2 = 0.0
+        return KernelStats(nd, mean, m2, total, self.min_t, self.max_t)
+
+    def scaled(self, a: float) -> "KernelStats":
+        """The statistics of ``a * X`` — the affine (through-origin) image
+        used when a fitted source->target time map rescales a transferred
+        kernel distribution."""
+        if self.n == 0:
+            return KernelStats()
+        return KernelStats(self.n, a * self.mean, a * a * self.m2,
+                           a * self.total, a * self.min_t, a * self.max_t)

@@ -241,6 +241,23 @@ class LMStudy:
                         (lambda fn=fn, args=args: fn(*args)), freq))
         return out
 
+    @staticmethod
+    def stats_bank(*results):
+        """Merge the kernel-statistics banks of completed LM study results
+        (``AutotuneSession(..., collect_stats=True)``) into one transfer
+        prior.  LM kernels are keyed by the knob subset that affects them,
+        so a bank recorded on one StepKnobs subspace (or another arch
+        sharing block shapes) warm-starts exactly the kernels the paper's
+        theory says it should: pass the merged bank back as
+        ``AutotuneSession(..., prior=bank)``."""
+        from repro.api.transfer import StatisticsBank
+        bank = StatisticsBank()
+        for r in results:
+            b = r.stats_bank() if hasattr(r, "stats_bank") else r
+            if b:
+                bank = bank.merge(b)
+        return bank
+
     def search_space(self, max_configs: Optional[int] = None):
         """The session-API view of this study's StepKnobs space.  Resets
         follow the policy (eager's persistent models skip the reset), the

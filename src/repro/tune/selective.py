@@ -39,13 +39,25 @@ class TimerReport:
 
 
 class SelectiveTimer:
-    """Owns kernel statistics across tuning iterations (one per policy)."""
+    """Owns kernel statistics across tuning iterations (one per policy).
 
-    def __init__(self, policy: Policy, clock: Callable[[], float] = None):
+    ``prior_lookup`` (cross-study transfer, ``repro.api.transfer``) maps a
+    ``Signature`` to a transferred ``KernelStats`` or ``None``; it is
+    consulted lazily the first time each kernel appears — and again after
+    every ``reset_models`` — so warm-started kernels carry a tight CI
+    before their first timed execution, and an eager session switches an
+    already-confident kernel off outright.
+    """
+
+    def __init__(self, policy: Policy, clock: Callable[[], float] = None,
+                 prior_lookup: Optional[Callable[[Signature],
+                                                 Optional[KernelStats]]]
+                 = None):
         self.policy = policy
         self.kbar: Dict[Signature, KernelStats] = {}
         self.global_off: set = set()
         self.clock = clock or time.perf_counter
+        self.prior_lookup = prior_lookup
         self._iter_executed: set = set()
         self._pred = 0.0
         self._meas = 0.0
@@ -55,6 +67,19 @@ class SelectiveTimer:
     def reset_models(self):
         self.kbar.clear()
         self.global_off.clear()
+
+    def _stats(self, sig: Signature) -> KernelStats:
+        st = self.kbar.get(sig)
+        if st is None:
+            st = self.prior_lookup(sig) if self.prior_lookup else None
+            if st is None:
+                st = KernelStats()
+            elif self.policy.persistent_models and st.n > 0 \
+                    and st.is_predictable(self.policy.tolerance, 1,
+                                          self.policy.min_samples):
+                self.global_off.add(sig)
+            self.kbar[sig] = st
+        return st
 
     def begin_iteration(self):
         self._iter_executed = set()
@@ -78,9 +103,7 @@ class SelectiveTimer:
         """Run (or skip) one kernel occurrence; returns the time charged to
         the configuration's predicted cost.  ``freq`` is the kernel's
         occurrence count along the step (the paper's alpha)."""
-        st = self.kbar.get(sig)
-        if st is None:
-            st = self.kbar[sig] = KernelStats()
+        st = self._stats(sig)
         if self._should_execute(sig, freq):
             t0 = self.clock()
             thunk()

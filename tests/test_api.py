@@ -80,6 +80,13 @@ def _tiny_session():
 
 
 def test_parallel_sweep_matches_serial():
+    # worker count is PINNED to 2, never derived from os.cpu_count():
+    # on a single-core CI box a cpu-derived count degenerates to 1 and the
+    # fork path silently goes untested.  run_tasks forks regardless of
+    # core count, so 2 workers exercise it everywhere fork exists.
+    from repro.api.parallel import fork_available
+    assert fork_available(), \
+        "no os.fork: the parallel sweep path cannot be exercised here"
     kw = dict(policies=["conditional", "eager"], tolerances=[1.0, 0.25])
     serial = _tiny_session().sweep(workers=1, **kw)
     forked = _tiny_session().sweep(workers=2, **kw)

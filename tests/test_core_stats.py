@@ -1,4 +1,11 @@
-"""core.stats: Welford estimator + CI machinery (property-based)."""
+"""core.stats: Welford estimator + CI machinery (property-based).
+
+The hypothesis-driven properties are optional-dep-guarded; the cache-
+coherence and merge-vs-concatenation properties additionally run against
+deterministic seeded random streams so they are exercised even where
+hypothesis is not installed (``scripts/check.sh`` fails the build if
+hypothesis IS installed but the property suite skipped anyway).
+"""
 
 import math
 
@@ -12,6 +19,65 @@ except ImportError:                     # property tests skip, the rest run
     HAVE_HYPOTHESIS = False
 
 from repro.core.stats import KernelStats, t_quantile_975
+
+
+# -- shared property bodies (used by both hypothesis and seeded fallbacks) ----
+
+def _check_cache_coherence(ops):
+    """Replay an interleaved update/query stream against one live (cached)
+    KernelStats and, at every query, a fresh uncached replay of the same
+    samples.  The live object's memoized CI factor (``_hw``), its
+    (n, tolerance)-keyed predictability verdicts, and its freq-monotone
+    true/false thresholds must be indistinguishable from no caching."""
+    live = KernelStats()
+    seen = []
+    for op in ops:
+        if op[0] == "u":
+            live.update(op[1])
+            seen.append(op[1])
+        else:
+            _, tol, freq, ms = op
+            fresh = KernelStats()
+            for x in seen:
+                fresh.update(x)
+            assert live.ci_halfwidth(freq) == fresh.ci_halfwidth(freq), \
+                (len(seen), freq)
+            want = fresh.n >= ms and fresh.relative_ci(freq) <= tol
+            got = live.is_predictable(tol, freq, ms)
+            assert got == want, (len(seen), tol, freq, ms)
+
+
+def _check_merge_equals_concat(chunks):
+    """Chained Chan merges over any chunking of a sample stream produce
+    the sufficient statistics of the concatenated stream."""
+    merged = KernelStats()
+    for chunk in chunks:
+        part = KernelStats()
+        for x in chunk:
+            part.update(x)
+        merged.merge(part)
+    flat = [x for chunk in chunks for x in chunk]
+    ref = KernelStats()
+    for x in flat:
+        ref.update(x)
+    assert merged.n == ref.n
+    assert merged.total == pytest.approx(ref.total, rel=1e-9)
+    if ref.n:
+        np.testing.assert_allclose(merged.mean, ref.mean, rtol=1e-9)
+        assert merged.min_t == ref.min_t and merged.max_t == ref.max_t
+    if ref.n >= 2:
+        np.testing.assert_allclose(merged.m2, ref.m2, rtol=1e-6,
+                                   atol=1e-15)
+
+
+def _check_json_roundtrip(xs):
+    ks = KernelStats()
+    for x in xs:
+        ks.update(x)
+    back = KernelStats.from_json(ks.to_json())
+    assert (back.n, back.mean, back.m2, back.total, back.min_t,
+            back.max_t) == (ks.n, ks.mean, ks.m2, ks.total, ks.min_t,
+                            ks.max_t)
 
 if HAVE_HYPOTHESIS:
     finite_floats = st.floats(min_value=1e-6, max_value=1e6,
@@ -60,6 +126,28 @@ if HAVE_HYPOTHESIS:
         if math.isfinite(base) and base > 0:
             np.testing.assert_allclose(shrunk, base / math.sqrt(freq),
                                        rtol=1e-9)
+
+    _ops = st.one_of(
+        st.tuples(st.just("u"), finite_floats),
+        st.tuples(st.just("q"), st.sampled_from([0.01, 0.1, 0.25, 1.0]),
+                  st.integers(min_value=1, max_value=64),
+                  st.integers(min_value=2, max_value=5)))
+
+    @given(st.lists(_ops, min_size=1, max_size=120))
+    @settings(max_examples=80, deadline=None)
+    def test_memoized_verdict_caches_match_uncached(ops):
+        _check_cache_coherence(ops)
+
+    @given(st.lists(st.lists(finite_floats, max_size=40), min_size=1,
+                    max_size=6))
+    @settings(max_examples=60, deadline=None)
+    def test_chunked_merge_equals_concatenated_stream(chunks):
+        _check_merge_equals_concat(chunks)
+
+    @given(st.lists(finite_floats, max_size=50))
+    @settings(max_examples=60, deadline=None)
+    def test_sufficient_stats_json_roundtrip(xs):
+        _check_json_roundtrip(xs)
 else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_welford_matches_numpy():
@@ -72,6 +160,52 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_ci_shrinks_by_sqrt_freq():
         pass
+
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(seeded fallback below still runs)")
+    def test_memoized_verdict_caches_match_uncached():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(seeded fallback below still runs)")
+    def test_chunked_merge_equals_concatenated_stream():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed "
+                             "(seeded fallback below still runs)")
+    def test_sufficient_stats_json_roundtrip():
+        pass
+
+
+# -- seeded fallbacks: the same properties, always exercised ------------------
+
+def test_cache_coherence_seeded_streams():
+    rng = np.random.default_rng(7)
+    tols = [0.01, 0.1, 0.25, 1.0]
+    for case in range(25):
+        ops = []
+        scale = 10.0 ** rng.integers(-6, 4)
+        spread = float(rng.uniform(0.01, 1.0))
+        for _ in range(int(rng.integers(3, 80))):
+            if rng.random() < 0.6:
+                ops.append(("u", float(
+                    scale * max(rng.normal(1.0, spread), 1e-9))))
+            else:
+                ops.append(("q", tols[int(rng.integers(len(tols)))],
+                            int(rng.integers(1, 64)),
+                            int(rng.integers(2, 5))))
+        _check_cache_coherence(ops)
+
+
+def test_merge_equals_concat_seeded_streams():
+    rng = np.random.default_rng(11)
+    for case in range(25):
+        chunks = [[float(x) for x in
+                   rng.lognormal(0.0, 1.5, size=rng.integers(0, 30))]
+                  for _ in range(int(rng.integers(1, 6)))]
+        _check_merge_equals_concat(chunks)
+        for chunk in chunks:
+            _check_json_roundtrip(chunk)
 
 
 def test_predictability_monotone_in_tolerance():

@@ -20,6 +20,25 @@ from repro.train.step import TrainConfig, make_train_step
 pytestmark = pytest.mark.skipif(len(jax.devices()) < 8,
                                 reason="needs 8 virtual devices")
 
+# jax 0.4.x lowering gaps, version-gated via the compat shim (see ROADMAP
+# "jax 0.4.x gaps": revisit when the container jax is bumped, or add a
+# ppermute-based fallback lowering).  The skip reasons below name the
+# concrete failure so the skip report points at the ROADMAP item.
+from repro.compat import HAS_AXIS_TYPES  # noqa: E402
+
+skip_partial_manual = pytest.mark.skipif(
+    not HAS_AXIS_TYPES,
+    reason="jax 0.4.37 partial-manual shard_map gap (ROADMAP 'jax 0.4.x "
+           "gaps'): shard_map over an axis_names subset lowers axis_index "
+           "to PartitionId, which XLA SPMD rejects — requires jax >= 0.5")
+
+skip_cholesky3d_miscompile = pytest.mark.skipif(
+    not HAS_AXIS_TYPES,
+    reason="jax 0.4.37 recursive-shard_map miscompile (ROADMAP 'jax 0.4.x "
+           "gaps'): recursive composition of manual regions under "
+           "re-sharding constraints miscompiles cholesky3d on 0.4.x SPMD "
+           "— requires jax >= 0.5")
+
 
 def test_rules_spec_dedup_and_fallback():
     mesh = make_host_mesh(model=4)        # (2, 4) data, model
@@ -145,14 +164,10 @@ def test_grad_accum_invariance():
                                    rtol=5e-3, atol=1e-4)
 
 
+@skip_partial_manual
 def test_pipeline_parallel_matches_reference():
     """GPipe-style pipeline over 'pod': loss and grads match the plain
     model (exact schedule equivalence through ppermute transposes)."""
-    from repro.compat import HAS_AXIS_TYPES
-    if not HAS_AXIS_TYPES:
-        pytest.skip("partial-manual shard_map (axis_names subset) lowers "
-                    "axis_index to PartitionId on jax 0.4.x, which XLA "
-                    "SPMD rejects — requires jax >= 0.5")
     from repro.parallel.pipeline import pipeline_loss
     cfg = get_config("smollm-135m", reduced=True)
     model = Model(cfg, ModelKnobs(kv_chunk=16, ssm_chunk=8))
@@ -227,12 +242,8 @@ def test_jaxdist_algorithms():
                                np.eye(8), atol=1e-4)
 
 
+@skip_cholesky3d_miscompile
 def test_jaxdist_cholesky3d():
-    from repro.compat import HAS_AXIS_TYPES
-    if not HAS_AXIS_TYPES:
-        pytest.skip("recursive composition of manual regions under "
-                    "re-sharding constraints miscompiles on jax 0.4.x "
-                    "SPMD — requires jax >= 0.5")
     from repro.jaxdist import cholesky_3d, make_3d_mesh
     mesh = make_3d_mesh(2)
     rng = np.random.default_rng(0)

@@ -1,0 +1,435 @@
+"""Cross-study statistics transfer (repro.api.transfer) contract tests.
+
+- neutrality: an empty or irrelevant prior is bit-identical to a fresh
+  session (golden parity through the session front-end);
+- transfer: a warm-started Capital study selects the same configuration
+  as the cold study while executing strictly fewer kernel invocations;
+- the bank round-trips losslessly through JSON (and disk);
+- checkpoint/resume of a warm-started session is bit-identical to an
+  uninterrupted warm run, and warm results are journaled under a
+  different key than cold ones (no cross-replay);
+- structural keys normalize communicator geometry by the world size;
+- discounting widens CIs, and the Gaussian-copula-style remap adopts the
+  target marginal for matched kernels while rescaling source-only ones.
+"""
+
+import json
+
+import pytest
+
+from repro.api import (AutotuneSession, ConfigPoint, SearchSpace,
+                       SimBackend, StatisticsBank, WallClockBackend)
+from repro.core.policies import POLICIES
+from repro.core.signatures import comm_sig, comp_sig, p2p_sig, \
+    structural_key
+from repro.core.stats import KernelStats
+from repro.core.tuner import space_of_study
+from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+
+from golden_runner import GOLDEN_PATH, _studies
+
+GOLDEN_FIELDS = ("full_time", "predicted", "rel_error", "comp_error",
+                 "selective_cost", "full_cost", "executed", "skipped",
+                 "predictions")
+
+
+def _backend():
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0, bias_sigma=0.0)
+    return SimBackend(timer=cm.sample)
+
+
+def _session(space, pol, **kw):
+    return AutotuneSession(space, backend=_backend(), policy=pol,
+                           tolerance=0.25, trials=2, **kw)
+
+
+def _stats_of(xs) -> KernelStats:
+    ks = KernelStats()
+    for x in xs:
+        ks.update(x)
+    return ks
+
+
+def _strip(result) -> dict:
+    d = result.to_json()
+    d.pop("wall_s", None)
+    return d
+
+
+# -- neutrality: empty/irrelevant priors --------------------------------------
+
+def test_empty_and_irrelevant_priors_are_bit_identical():
+    space = space_of_study(_studies()[1])          # golden-capital
+    irrelevant = StatisticsBank(
+        {"comp:nosuchkernel(7)": _stats_of([1.0, 1.1, 0.9, 1.0]),
+         "comm:bcast(b8,s1,t1)": _stats_of([2.0, 2.1, 1.9, 2.0])})
+    for pol in ("conditional", "eager"):
+        fresh = _session(space, pol).run()
+        empty = _session(space, pol, prior=StatisticsBank()).run()
+        irrel = _session(space, pol, prior=irrelevant).run()
+        assert _strip(empty) == _strip(fresh)
+        assert _strip(irrel) == _strip(fresh)
+
+
+def test_empty_prior_matches_golden_reports():
+    """Golden parity through the warm-start plumbing: a session carrying a
+    no-op prior still reproduces the seed engine's records bit-for-bit."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    study = _studies()[1]
+    space = space_of_study(study)
+    for pol in POLICIES:
+        result = _session(space, pol, prior=StatisticsBank(),
+                          collect_stats=True).run()
+        g_recs = golden[study.name][pol]
+        got = json.loads(json.dumps([r.to_json() for r in result.records]))
+        for g, n in zip(g_recs, got):
+            assert n["name"] == g["name"]
+            for field in GOLDEN_FIELDS:
+                assert n[field] == g[field], \
+                    f"{pol}/{g['name']}/{field}: {n[field]!r} != {g[field]!r}"
+
+
+# -- transfer on the Capital study --------------------------------------------
+
+def test_warm_capital_same_winner_fewer_executions():
+    space = space_of_study(_studies()[1])          # golden-capital, eager
+    cold = _session(space, "eager", collect_stats=True).run()
+    bank = cold.stats_bank()
+    assert bank is not None and len(bank) > 0
+    warm = _session(space, "eager", prior=bank).run()
+    assert warm.chosen.name == cold.chosen.name
+    cold_exec = sum(r.executed for r in cold.records)
+    warm_exec = sum(r.executed for r in warm.records)
+    assert warm_exec < cold_exec
+    assert warm.selective_tuning_time < cold.selective_tuning_time
+    # the prior, not luck: warm predictions stay within the tolerance
+    assert all(r.rel_error <= 0.25 for r in warm.records)
+
+
+def test_warm_resetting_study_reseeds_every_configuration():
+    """golden-slate resets statistics between configurations; the prior
+    must re-seed after each reset (the bank itself banks pre-reset
+    statistics — kernels of both tile sizes), and the study overall
+    executes less warm than cold.  Individual kernels can execute MORE
+    warm — a byte-bucketed comm signature pools two configurations'
+    message sizes, and that mixture prior's wider CI delays its skip —
+    so the claim is study-level, not per-kernel."""
+    space = space_of_study(_studies()[0])          # golden-slate, resets
+    cold = _session(space, "online", collect_stats=True).run()
+    bank = cold.stats_bank()
+    assert "comp:potrf(64)" in bank.entries        # config 0's tile
+    assert "comp:potrf(128)" in bank.entries       # config 1's, post-reset
+    warm = _session(space, "online", prior=bank).run()
+    assert sum(r.executed for r in warm.records) < \
+        sum(r.executed for r in cold.records)
+    assert all(r.rel_error <= 0.25 for r in warm.records)
+
+
+def test_wallclock_warm_start_skips_from_trial_one():
+    sig_a, sig_b = comp_sig("ka", 1), comp_sig("kb", 2)
+    now = [0.0]
+    durations = {sig_a: 1.0, sig_b: 0.01}
+
+    def clock():
+        return now[0]
+
+    def make_thunk(sig):
+        def thunk():
+            now[0] += durations[sig]
+        return thunk
+
+    kernels = [(sig_a, make_thunk(sig_a), 1),
+               (sig_b, make_thunk(sig_b), 1)]
+    space = SearchSpace(name="fake", points=[
+        ConfigPoint(name="c0", params={"i": 0}),
+        ConfigPoint(name="c1", params={"i": 1})])
+
+    def run(prior=None):
+        return AutotuneSession(
+            space, backend=WallClockBackend(lambda p: kernels, clock=clock),
+            policy="eager", tolerance=1.0, min_samples=2, trials=4,
+            collect_stats=True, prior=prior, prior_discount=1.0).run()
+
+    cold = run()
+    warm = run(prior=cold.stats_bank())
+    assert cold.selective_tuning_time > 0
+    assert warm.selective_tuning_time == 0.0      # everything pre-skipped
+    assert warm.chosen.name == cold.chosen.name
+
+
+# -- lossless serialization ---------------------------------------------------
+
+def test_bank_json_roundtrip_lossless(tmp_path):
+    bank = StatisticsBank(
+        {"comp:gemm(64,64,64)": _stats_of([1.0, 1.25, 0.75, 1.125]),
+         "comp:potrf(128)": _stats_of([3.0]),
+         "comm:bcast(b4096,s1,t1)": _stats_of([0.5, 0.5000001]),
+         "comm:send(b128,s1/4,t0)": _stats_of([2.0 ** -40, 1e-9])},
+        meta=[{"study": "golden-capital", "policy": "eager",
+               "tolerance": 0.25}])
+    back = StatisticsBank.from_json(json.loads(json.dumps(bank.to_json())))
+    assert back.meta == bank.meta
+    assert set(back.entries) == set(bank.entries)
+    for k, st in bank.entries.items():
+        b = back.entries[k]
+        assert (b.n, b.mean, b.m2, b.total, b.min_t, b.max_t) == \
+            (st.n, st.mean, st.m2, st.total, st.min_t, st.max_t)
+    assert back.fingerprint() == bank.fingerprint()
+    # disk round-trip
+    path = str(tmp_path / "bank.json")
+    bank.save(path)
+    assert StatisticsBank.load(path).fingerprint() == bank.fingerprint()
+
+
+def test_harvested_bank_roundtrips_through_result_json():
+    """The bank a session attaches to StudyResult.extra must survive the
+    result's own JSON round-trip (what checkpoints and sweep pipes do)."""
+    from repro.api import StudyResult
+    space = space_of_study(_studies()[1])
+    cold = _session(space, "eager", collect_stats=True).run()
+    back = StudyResult.from_json(json.loads(json.dumps(cold.to_json())))
+    b0, b1 = cold.stats_bank(), back.stats_bank()
+    assert b1.fingerprint() == b0.fingerprint()
+
+
+def test_bank_merge_equals_concatenated_streams():
+    xs, ys = [1.0, 2.0, 3.0], [4.0, 5.0]
+    a = StatisticsBank({"k": _stats_of(xs), "only-a": _stats_of([7.0])})
+    b = StatisticsBank({"k": _stats_of(ys), "only-b": _stats_of([8.0])})
+    m = a.merge(b)
+    ref = _stats_of(xs + ys)
+    got = m.entries["k"]
+    assert got.n == ref.n
+    assert got.mean == pytest.approx(ref.mean, rel=1e-12)
+    assert got.m2 == pytest.approx(ref.m2, rel=1e-9)
+    assert set(m.entries) == {"k", "only-a", "only-b"}
+    # sources untouched
+    assert a.entries["k"].n == len(xs)
+
+
+# -- warm checkpoint/resume ---------------------------------------------------
+
+class _FailingBackend(SimBackend):
+    """Raises on the named configuration's reference run, once."""
+
+    def __init__(self, fail_at: str, **kw):
+        super().__init__(**kw)
+        self.fail_at = fail_at
+        self.tripped = False
+
+    def open(self, *a, **kw):
+        run = super().open(*a, **kw)
+        orig = run.run_reference
+
+        def ref(point):
+            if not self.tripped and point.name == self.fail_at:
+                self.tripped = True
+                raise RuntimeError("interrupted")
+            return orig(point)
+
+        run.run_reference = ref
+        return run
+
+
+def test_warm_checkpoint_resume_bit_identical(tmp_path):
+    space = space_of_study(_studies()[0])          # resets between configs
+    bank = _session(space, "online", collect_stats=True).run().stats_bank()
+
+    def session(backend):
+        return AutotuneSession(space, backend=backend, policy="online",
+                               tolerance=0.25, trials=2, prior=bank)
+
+    reference = session(_backend()).run()
+    ck = str(tmp_path / "warm.json")
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0, bias_sigma=0.0)
+    failing = _FailingBackend(space.points[1].name, timer=cm.sample)
+    with pytest.raises(RuntimeError, match="interrupted"):
+        session(failing).run(checkpoint=ck)
+    resumed = session(failing).run(checkpoint=ck)
+    assert _strip(resumed) == _strip(reference)
+
+
+def test_checkpoint_keys_separate_warm_from_cold(tmp_path):
+    """A journaled cold result must not satisfy a warm session (and vice
+    versa): the prior fingerprint is part of the study key."""
+    space = space_of_study(_studies()[1])
+    cold_session = _session(space, "eager", collect_stats=True)
+    ck = str(tmp_path / "ck.json")
+    cold = cold_session.run(checkpoint=ck)
+    bank = cold.stats_bank()
+    warm_session = _session(space, "eager", prior=bank)
+    k_cold = cold_session._key(cold_session._policy(), 0, 0)
+    k_warm = warm_session._key(warm_session._policy(), 0, 0)
+    assert k_cold != k_warm
+    # running warm against the cold checkpoint recomputes (fresh result,
+    # fewer executions), rather than replaying the journaled cold study
+    warm = warm_session.run(checkpoint=ck)
+    assert sum(r.executed for r in warm.records) < \
+        sum(r.executed for r in cold.records)
+    # distinct banks get distinct fingerprints
+    assert bank.discounted(0.5).fingerprint() != bank.fingerprint()
+
+
+def test_resumed_study_exports_no_partial_bank(tmp_path):
+    """Configurations replayed from a journal never fed the resumed run's
+    models; presenting the remainder as the study's bank would silently
+    drop their kernels — the resumed result must export no bank at all."""
+    space = space_of_study(_studies()[0])          # resets between configs
+    ck = str(tmp_path / "resume.json")
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0, bias_sigma=0.0)
+    failing = _FailingBackend(space.points[1].name, timer=cm.sample)
+
+    def session(backend):
+        return AutotuneSession(space, backend=backend, policy="online",
+                               tolerance=0.25, trials=2,
+                               collect_stats=True)
+
+    with pytest.raises(RuntimeError, match="interrupted"):
+        session(failing).run(checkpoint=ck)
+    resumed = session(failing).run(checkpoint=ck)
+    assert resumed.stats_bank() is None
+    # an uninterrupted run of the same study does export one
+    assert session(_backend()).run().stats_bank() is not None
+
+
+def test_harvest_banks_prior_exactly_once_across_resets():
+    """A warm run's kbar entries are merge(prior, new samples); harvesting
+    at every model reset must bank only the measured deltas, folding the
+    prior back in exactly once at export — chained warm-starts must not
+    compound transferred confidence (what reviewers call C-fold prior
+    inflation)."""
+    from repro.api.transfer import Harvest
+    sig = comp_sig("gemm", 8, 8, 8)
+    prior_stats = _stats_of([1.0, 1.2, 0.8, 1.0, 1.1, 0.9])
+    bank = StatisticsBank({structural_key(sig, 4): prior_stats})
+    h = Harvest(4, bank)
+    deltas = [[2.0, 2.2], [1.5], [3.0, 3.1, 2.9]]
+    for d in deltas[:-1]:                          # two model resets
+        table = prior_stats.copy()
+        for x in d:
+            table.update(x)
+        h.add({sig: table})
+    last = prior_stats.copy()
+    for x in deltas[-1]:
+        last.update(x)
+    out = StatisticsBank.from_json(h.payload({sig: last}))
+    got = out.entries[structural_key(sig, 4)]
+    ref = _stats_of([x for d in deltas for x in d] +
+                    [1.0, 1.2, 0.8, 1.0, 1.1, 0.9])
+    assert got.n == ref.n                          # prior counted ONCE
+    assert got.mean == pytest.approx(ref.mean, rel=1e-9)
+    assert got.m2 == pytest.approx(ref.m2, rel=1e-6)
+    # an unobserved prior kernel passes through unchanged
+    h2 = Harvest(4, bank)
+    out2 = StatisticsBank.from_json(h2.payload({}))
+    assert out2.entries[structural_key(sig, 4)].n == prior_stats.n
+
+
+def test_kernelstats_minus_inverts_merge():
+    prior = _stats_of([1.0, 1.5, 0.5, 1.0])
+    delta = _stats_of([4.0, 4.5, 3.5])
+    total = prior.copy()
+    total.merge(delta)
+    back = total.minus(prior)
+    assert back.n == delta.n
+    assert back.mean == pytest.approx(delta.mean, rel=1e-12)
+    assert back.m2 == pytest.approx(delta.m2, rel=1e-9)
+    assert total.minus(total) is None
+
+
+def test_checkpoint_key_format_is_legacy_stable():
+    """Keys written by pre-transfer sessions must keep resolving: the
+    canonical key string of a JSON-native study key is byte-identical to
+    the historical ``json.dumps(key, sort_keys=True)`` form."""
+    from repro.api.session import _Checkpoint
+    key = {"space": "golden-slate", "n_points": 2,
+           "backend": {"name": "sim", "overhead": 1e-06,
+                       "machine": None, "timer": "custom",
+                       "cost_model": "default"},
+           "policy": "online", "tolerance": 0.25, "trials": 2,
+           "search": "exhaustive", "seed": 0, "allocation": 0}
+    assert _Checkpoint._k(key) == json.dumps(key, sort_keys=True)
+
+
+# -- structural keys ----------------------------------------------------------
+
+def test_structural_keys_normalize_world_geometry():
+    # compute kernels: world-independent, compact str form
+    g = comp_sig("gemm", 64, 64, 64)
+    assert structural_key(g, 8) == structural_key(g, 4096) \
+        == "comp:gemm(64,64,64)"
+    # full-world collectives match across processor counts
+    assert structural_key(comm_sig("bcast", 1000, 64, 1), 64) \
+        == structural_key(comm_sig("bcast", 1000, 512, 1), 512)
+    # same relative sub-grid matches; different fraction does not
+    assert structural_key(comm_sig("allreduce", 512, 8, 1), 64) \
+        == structural_key(comm_sig("allreduce", 512, 64, 1), 512)
+    assert structural_key(comm_sig("allreduce", 512, 8, 1), 64) \
+        != structural_key(comm_sig("allreduce", 512, 16, 1), 64)
+    # contiguous (stride<=1) is kept verbatim; strided is world-relative:
+    # a 1/8-world stride-1/8 fiber matches at any processor count
+    assert structural_key(comm_sig("bcast", 64, 8, 8), 64) \
+        == structural_key(comm_sig("bcast", 64, 32, 32), 256)
+    assert structural_key(comm_sig("bcast", 64, 8, 8), 64) \
+        != structural_key(comm_sig("bcast", 64, 16, 16), 256)
+    # p2p: size-2 stride-0 signatures match across worlds
+    assert structural_key(p2p_sig("send", 100), 16) \
+        == structural_key(p2p_sig("send", 100), 1024)
+    # byte bucketing flows through (p2p_sig buckets to powers of two)
+    assert "b128" in structural_key(p2p_sig("send", 100), 16)
+
+
+# -- discounting and the copula remap ----------------------------------------
+
+def test_discount_widens_ci_and_preserves_moments():
+    st = _stats_of([1.0, 1.01, 0.99, 1.0, 1.02, 0.98, 1.0, 1.0])
+    bank = StatisticsBank({"k": st})
+    half = bank.discounted(0.5).entries["k"]
+    assert half.n == st.n // 2
+    assert half.mean == pytest.approx(st.mean)
+    assert half.variance == pytest.approx(st.variance)
+    assert half.ci_halfwidth() > st.ci_halfwidth()
+    # discounting to below one sample drops the entry entirely
+    assert len(StatisticsBank({"k": _stats_of([1.0])}).discounted(0.5)) == 0
+    tight = _stats_of([0.9, 1.1] * 30)
+    assert tight.is_predictable(0.05)
+    assert not tight.discounted(0.1).is_predictable(0.05)
+
+
+def test_copula_remap_adopts_target_marginal():
+    src = StatisticsBank({
+        "shared": _stats_of([1.0, 1.1, 0.9, 1.0, 1.05, 0.95] * 5),
+        "src-only": _stats_of([4.0, 4.4, 3.6, 4.0]),
+    })
+    # target runs ~2x slower (e.g. a different allocation)
+    tgt = StatisticsBank({
+        "shared": _stats_of([2.0, 2.2, 1.8]),
+        "tgt-only": _stats_of([9.0, 9.1]),
+    })
+    out = src.remapped(tgt, min_matches=1)
+    shared = out.entries["shared"]
+    # target marginal, pooled evidence
+    assert shared.mean == pytest.approx(tgt.entries["shared"].mean)
+    assert shared.n == src.entries["shared"].n + tgt.entries["shared"].n
+    # source-only kernels ride the fitted global scale (~2x)
+    scaled = out.entries["src-only"]
+    ratio = scaled.mean / src.entries["src-only"].mean
+    assert 1.5 < ratio < 2.7
+    # relative spread is preserved under the through-origin scale
+    assert scaled.std / scaled.mean == pytest.approx(
+        src.entries["src-only"].std / src.entries["src-only"].mean)
+    # target-only kernels pass through
+    assert out.entries["tgt-only"].mean == \
+        pytest.approx(tgt.entries["tgt-only"].mean)
+    # a remapped bank is a valid, serializable prior
+    rt = StatisticsBank.from_json(json.loads(json.dumps(out.to_json())))
+    assert rt.fingerprint() == out.fingerprint()
+
+
+def test_remap_identity_with_no_matches():
+    src = StatisticsBank({"a": _stats_of([1.0, 1.1])})
+    tgt = StatisticsBank({"b": _stats_of([5.0, 5.5])})
+    out = src.remapped(tgt)
+    assert out.entries["a"].mean == pytest.approx(1.05)
+    assert out.entries["b"].mean == pytest.approx(5.25)
