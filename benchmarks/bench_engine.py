@@ -4,13 +4,30 @@ Measures the simulator itself (not the paper's speedup metrics): one full
 execution plus several selective iterations of the SLATE Cholesky study
 program at world sizes 16/64/256, reporting simulated events per wall-clock
 second.  Emits ``BENCH_engine.json`` at the repository root so the perf
-trajectory is tracked from PR 1 onward; ``scripts/check.sh`` gates a quick
-run's warm throughput against the committed baseline (best-of-3 must reach
-CHECK_RATIO, default 50% — coarse because the CI box swings 2-4x).
+trajectory is tracked from PR 1 onward; ``scripts/check.sh --stage engine``
+gates a quick run's warm AND cold throughput against the committed baseline
+(best-of-3 must reach CHECK_RATIO, default 50% — coarse because the CI box
+swings 2-4x).
+
+Throughput metrics per world size (PR 4 added the cold split; a fifth
+field, ``events_per_sec_cold_scalar``, records the same-session
+``trace_cache=False`` reference the batched-cold ratio is taken against):
+
+- ``events_per_sec``              — all iterations;
+- ``events_per_sec_warm``         — selective iterations after warmup: the
+  steady-state interception hot path (PR-1 target);
+- ``events_per_sec_cold``         — the first (recording + forced) run
+  under the default cost model, whose straggler branch forces per-event
+  scalar draws;
+- ``events_per_sec_cold_batched`` — the same recording run with the
+  straggler branch off, where the cold interpreter pre-draws every sample
+  of the run in one vectorized call (PR-4 target).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full sweep
     PYTHONPATH=src python -m benchmarks.bench_engine --quick    # ~10 s sanity
+    PYTHONPATH=src python -m benchmarks.bench_engine --verify   # cold-path
+                       # event-program/bit-identity assertions, then exit
     PYTHONPATH=src python -m benchmarks.bench_engine --out path.json
 """
 
@@ -27,7 +44,7 @@ from repro.core.policies import policy
 from repro.linalg import slate_cholesky
 from repro.simmpi.comm import World
 from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
-from repro.simmpi.runtime import Runtime
+from repro.simmpi.runtime import (EV_BLOCK, EV_COLL, Runtime)
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(ROOT, "BENCH_engine.json")
@@ -41,27 +58,49 @@ GEOMETRIES = {
 }
 
 
-def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
-                selective_iters: int = 6, warmup: int = 2,
-                seed: int = 0) -> dict:
-    """One full (reference) execution followed by ``selective_iters``
-    selective iterations — the tuner's per-configuration pattern.
-
-    Two throughput metrics:
-
-    - ``events_per_sec``       — all iterations, including the cold first
-      run (generator execution, trace recording, full kernel sampling);
-    - ``events_per_sec_warm``  — selective iterations after ``warmup``
-      rounds: the steady-state interception hot path the tuner spends
-      nearly all its time in, and the target of the engine optimization.
-    """
+def _setup(world_size: int, *, pol: str, tol: float, seed: int,
+           straggler_p=None, trace_cache: bool = True):
     pr, pc, n, tile = GEOMETRIES[world_size]
     world = World(world_size)
     critter = Critter(world, policy(pol, tolerance=tol))
-    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed)
-    rt = Runtime(world, critter, cm.sample, seed=seed)
+    kw = {} if straggler_p is None else {"straggler_p": straggler_p}
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed, **kw)
+    rt = Runtime(world, critter, cm.sample, seed=seed,
+                 trace_cache=trace_cache)
     prog = slate_cholesky.make_program(world, n=n, tile=tile, lookahead=1,
                                        pr=pr, pc=pc)
+    return rt, prog
+
+
+def bench_cold(world_size: int, *, pol: str = "online", tol: float = 0.25,
+               seed: int = 0, straggler_p=0.0,
+               trace_cache: bool = True) -> dict:
+    """One recording (forced) run in isolation — the batched cold path
+    when ``straggler_p == 0`` (vectorized pre-draw), the scalar-fallback
+    cold path otherwise, and with ``trace_cache=False`` the seed-style
+    interleaved scalar pass that serves as the same-session reference the
+    batched speedup is measured against (the shared CI box swings 2-4x
+    between sessions, so only within-session ratios are stable)."""
+    rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed,
+                      straggler_p=straggler_p, trace_cache=trace_cache)
+    t0 = time.perf_counter()
+    res = rt.run(prog, force_execute=True)
+    dt = time.perf_counter() - t0
+    return {"events": res.events, "wall_s": round(dt, 4),
+            "events_per_sec": round(res.events / dt, 1),
+            "straggler_p": straggler_p}
+
+
+def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
+                selective_iters: int = 6, warmup: int = 2,
+                seed: int = 0, cold_repeats: int = 3) -> dict:
+    """One full (reference) execution followed by ``selective_iters``
+    selective iterations — the tuner's per-configuration pattern — under
+    the DEFAULT cost model (straggler branch on, so the cold run exercises
+    the scalar-fallback draws), plus one isolated batched cold run
+    (straggler branch off, vectorized pre-draw)."""
+    pr, pc, n, tile = GEOMETRIES[world_size]
+    rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed)
     runs = []
     total_events = 0
     total_wall = 0.0
@@ -81,6 +120,22 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
         if i > warmup:
             warm_events += res.events
             warm_wall += dt
+    # batched-vs-scalar cold pair: alternate the two and keep min-wall of
+    # each so the pairing survives the box's second-scale throughput
+    # swings (a single A-then-B measurement can land A in a slow patch
+    # and B in a fast one, inverting the ratio)
+    b_walls, s_walls = [], []
+    n_events = 0
+    for _ in range(cold_repeats):
+        b = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                       straggler_p=0.0)
+        s = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                       straggler_p=0.0, trace_cache=False)
+        b_walls.append(b["wall_s"])
+        s_walls.append(s["wall_s"])
+        n_events = b["events"]
+    batched = {"events_per_sec": round(n_events / min(b_walls), 1)}
+    scalar = {"events_per_sec": round(n_events / min(s_walls), 1)}
     return {
         "study": "slate-cholesky", "policy": pol, "tolerance": tol,
         "world_size": world_size, "n": n, "tile": tile, "lookahead": 1,
@@ -88,24 +143,111 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
         "events_per_sec": round(total_events / total_wall, 1),
         "events_per_sec_warm": round(warm_events / warm_wall, 1)
         if warm_wall > 0 else 0.0,
+        "events_per_sec_cold": runs[0]["events_per_sec"],
+        "events_per_sec_cold_batched": batched["events_per_sec"],
+        "events_per_sec_cold_scalar": scalar["events_per_sec"],
+        "cold_speedup_vs_scalar": round(
+            batched["events_per_sec"] / scalar["events_per_sec"], 2),
         "runs": runs,
     }
 
 
-def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6) -> dict:
+# -------------------------------------------------------- cold-path verify
+
+def _canonical_events(prog) -> list:
+    """Event-program tuples with engine objects replaced by stable keys so
+    programs recorded by different Runtime/World instances compare."""
+    out = []
+    for ev in prog.events:
+        k = ev[0]
+        if k == EV_BLOCK:
+            out.append((k, ev[1], tuple(ev[2].sids)))
+        elif k == EV_COLL:
+            out.append((k, ev[1], ev[2].ranks))
+        else:
+            out.append(ev)
+    return out
+
+
+def _record_program(world_size: int, *, straggler_p, seed: int = 0):
+    rt, prog = _setup(world_size, pol="online", tol=0.25, seed=seed,
+                      straggler_p=straggler_p)
+    rt.run(prog, force_execute=True)
+    return _canonical_events(rt._traces[prog])
+
+
+def verify_cold_path(world_size: int = 16) -> dict:
+    """Assert the batched cold path is a pure optimization.
+
+    1. The recorded event program is identical whether the cold run drew
+       its samples batched (straggler off) or through the scalar fallback
+       (straggler on): recording is structural, timing-independent.
+    2. A batched cold run and an unbatched (``trace_cache=False``,
+       interleaved scalar) cold run over the same cost model produce
+       bit-identical reports and leave the sampler RNG in the same state.
+
+    Returns a small summary dict; raises AssertionError on any mismatch.
+    Wired into ``--verify``, ``scripts/check.sh --stage engine`` and
+    ``tests/test_cold_path.py``.
+    """
+    ev_batched = _record_program(world_size, straggler_p=0.0)
+    ev_scalar = _record_program(world_size, straggler_p=0.002)
+    assert ev_batched == ev_scalar, (
+        "batched and unbatched cold runs recorded different event programs")
+
+    fields = ("predicted_time", "wall_time", "crit_comp", "crit_comm",
+              "measured_time", "max_measured_comp", "executed", "skipped",
+              "events")
+    reports = []
+    states = []
+    for trace_cache in (True, False):
+        rt, prog = _setup(world_size, pol="online", tol=0.25, seed=0,
+                          straggler_p=0.0, trace_cache=trace_cache)
+        res = rt.run(prog, force_execute=True)
+        reports.append({f: getattr(res, f) for f in fields})
+        states.append(rt._rng.bit_generator.state)
+    assert reports[0] == reports[1], (
+        f"batched cold report diverged: {reports[0]} vs {reports[1]}")
+    assert states[0] == states[1], (
+        "batched cold run consumed a different RNG stream")
+    return {"world_size": world_size, "events": len(ev_batched),
+            "report": reports[0]}
+
+
+_RATE_FIELDS = ("events_per_sec", "events_per_sec_warm",
+                "events_per_sec_cold", "events_per_sec_cold_batched",
+                "events_per_sec_cold_scalar")
+
+
+def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6,
+        best_of: int = 1) -> dict:
+    """``best_of > 1`` repeats each world size's study and keeps the
+    per-metric maxima (runs list from the best-warm repeat): the shared CI
+    box swings 2-4x between moments, and best-of-N is the same noise
+    reduction check.sh applies to its gate."""
     results = []
     for ws in world_sizes:
-        r = bench_study(ws, selective_iters=selective_iters)
+        reps = [bench_study(ws, selective_iters=selective_iters)
+                for _ in range(best_of)]
+        r = max(reps, key=lambda x: x["events_per_sec_warm"])
+        for f in _RATE_FIELDS:
+            r[f] = max(rep[f] for rep in reps)
+        r["cold_speedup_vs_scalar"] = max(rep["cold_speedup_vs_scalar"]
+                                          for rep in reps)
         print(f"world={ws:4d}  events={r['total_events']:9d}  "
               f"wall={r['total_wall_s']:8.3f}s  "
               f"events/sec={r['events_per_sec']:10.1f}  "
-              f"warm={r['events_per_sec_warm']:10.1f}")
+              f"warm={r['events_per_sec_warm']:10.1f}  "
+              f"cold={r['events_per_sec_cold']:9.1f}  "
+              f"cold_batched={r['events_per_sec_cold_batched']:9.1f}  "
+              f"(vs scalar {r['cold_speedup_vs_scalar']:.2f}x)")
         results.append(r)
     return {
         "meta": {
             "benchmark": "engine-throughput",
             "python": platform.python_version(),
             "machine": platform.machine(),
+            "best_of": best_of,
         },
         "results": results,
     }
@@ -115,12 +257,23 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="world 16+64 only, fewer iterations (~10 s)")
+    ap.add_argument("--verify", action="store_true",
+                    help="run the cold-path identity assertions and exit")
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="repeat each world size N times, keep per-metric "
+                         "maxima (noise reduction on shared boxes)")
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args()
+    if args.verify:
+        summary = verify_cold_path()
+        print(f"cold-path verify OK: {summary['events']} events, "
+              f"report {summary['report']}")
+        return
     if args.quick:
-        out = run(world_sizes=(16, 64), selective_iters=4)
+        out = run(world_sizes=(16, 64), selective_iters=4,
+                  best_of=args.best_of)
     else:
-        out = run()
+        out = run(best_of=args.best_of)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {args.out}")

@@ -13,6 +13,13 @@ CPU; the default grid is therefore the bounded subset recorded in
 ``results/paper_case_studies.json`` (Capital at two policies x two
 tolerances — the study whose eager-vs-conditional contrast is the paper's
 headline Fig 5 claim), and ``--studies/--policies/--eps`` widen it.
+
+``--quick`` shrinks the grid to the nightly-CI slice (eager at tolerance
+0.25, 2 trials); ``--bank PATH`` warm-starts every study of the sweep
+from a recorded ``StatisticsBank`` (repro.api.transfer) — the nightly job
+seeds from the CI-scale Capital bank recorded by ``bench_transfer``
+(``results/capital-cholesky-ci_stats_bank.json``), exercising the
+ROADMAP's warm-started paper-scale sweep end to end.
 """
 
 from __future__ import annotations
@@ -31,17 +38,30 @@ DEFAULT_STUDIES = ("capital-cholesky",)
 DEFAULT_POLICIES = ("conditional", "eager")
 DEFAULT_EPS = (0.25, 0.0625)
 
+QUICK_POLICIES = ("eager",)
+QUICK_EPS = (0.25,)
+
 
 def run(studies=DEFAULT_STUDIES, policies=DEFAULT_POLICIES,
-        eps=DEFAULT_EPS, trials: int = 3, workers: int = 0):
+        eps=DEFAULT_EPS, trials: int = 3, workers: int = 0,
+        quick: bool = False, bank=None):
+    if quick:
+        policies, eps, trials = QUICK_POLICIES, QUICK_EPS, min(trials, 2)
+    prior = None
+    if bank:
+        from repro.api import StatisticsBank
+        prior = StatisticsBank.load(bank)
+        print(f"warm-starting from bank {bank} "
+              f"({len(prior)} kernel signatures)")
     all_rows = []
     for name in studies:
         ck = os.path.join(ART, "paper_sweep_checkpoint.json")
         rows = sweep_study(STUDIES[name], eps=eps, policies=policies,
                            trials=trials, scale="paper", workers=workers,
-                           checkpoint=ck)
+                           checkpoint=ck, prior=prior)
         all_rows.extend(rows)
-        print(f"\n== {name} (PAPER scale) ==")
+        print(f"\n== {name} (PAPER scale{', quick' if quick else ''}"
+              f"{', warm' if prior else ''}) ==")
         print(fmt_table(rows, COLS))
     save_rows("paper_case_studies", all_rows)
     return all_rows
@@ -58,9 +78,15 @@ def main():
     ap.add_argument("--trials", type=int, default=3)
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = one per CPU")
+    ap.add_argument("--quick", action="store_true",
+                    help="nightly-CI slice: eager @ tol 0.25, 2 trials")
+    ap.add_argument("--bank", default=None,
+                    help="StatisticsBank JSON to warm-start the sweep "
+                         "from (repro.api.transfer)")
     args = ap.parse_args()
     run(studies=args.studies, policies=args.policies, eps=args.eps,
-        trials=args.trials, workers=args.workers)
+        trials=args.trials, workers=args.workers, quick=args.quick,
+        bank=args.bank)
 
 
 if __name__ == "__main__":

@@ -21,19 +21,22 @@ EPS_FULL = (1.0, 0.5, 0.25, 0.125, 0.0625, 0.03125)
 EPS_FAST = (1.0, 0.25, 0.0625)
 
 
-def sweep_session(make_study, *, trials: int = 3,
-                  scale: str = "ci") -> AutotuneSession:
+def sweep_session(make_study, *, trials: int = 3, scale: str = "ci",
+                  prior=None) -> AutotuneSession:
     """Session over a paper study; ``make_study(scale)`` is one of
-    ``repro.linalg.studies.STUDIES``."""
+    ``repro.linalg.studies.STUDIES``.  ``prior`` is a ``StatisticsBank``
+    warm-starting every study of the sweep (repro.api.transfer)."""
     return AutotuneSession(space_of_study(make_study(scale)),
-                           backend=SimBackend(), trials=trials)
+                           backend=SimBackend(), trials=trials,
+                           prior=prior)
 
 
 def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
                 eps: Sequence[float] = EPS_FAST, trials: int = 3,
                 seeds: Sequence[int] = (0,), allocations=(0,),
                 scale: str = "ci", workers: int = 1,
-                checkpoint: Optional[str] = None) -> List[dict]:
+                checkpoint: Optional[str] = None,
+                prior=None) -> List[dict]:
     """The paper's measurement protocol (§VI.A): for each policy x epsilon
     (x allocation), run the full exhaustive autotune and record speedup,
     mean prediction error, optimum quality.  ``workers=0`` means one per
@@ -42,7 +45,8 @@ def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
         # floor of 2 so single-core boxes still go through the fork pool
         # (bit-identical to serial) instead of silently degenerating
         workers = max(os.cpu_count() or 1, 2)
-    session = sweep_session(make_study, trials=trials, scale=scale)
+    session = sweep_session(make_study, trials=trials, scale=scale,
+                            prior=prior)
     results = session.sweep(policies=policies, tolerances=eps, seeds=seeds,
                             allocations=allocations, workers=workers,
                             checkpoint=checkpoint)

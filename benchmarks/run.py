@@ -9,8 +9,11 @@ Sections:
 
 ``--full`` widens epsilon sweeps and architectures.  ``--paper`` adds the
 paper-scale sweep (real processor counts, checkpointed + process-parallel
-via the session API; see ``bench_paper``).  ``--workers N`` parallelizes
-the sim-study sweeps (N=0: one per CPU).
+via the session API; see ``bench_paper``); ``--quick`` shrinks it to the
+nightly-CI slice and ``--bank PATH`` warm-starts it from a recorded
+``StatisticsBank`` (the nightly job seeds from
+``results/capital-cholesky-ci_stats_bank.json``).  ``--workers N``
+parallelizes the sim-study sweeps (N=0: one per CPU).
 """
 
 from __future__ import annotations
@@ -29,6 +32,12 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=None,
                     help="process-parallel sweep workers (0 = per CPU; "
                          "default: per CPU for --paper, serial otherwise)")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --paper: the nightly-CI slice "
+                         "(eager @ tol 0.25, 2 trials)")
+    ap.add_argument("--bank", default=None,
+                    help="with --paper: StatisticsBank JSON warm-starting "
+                         "the sweep")
     ap.add_argument("--sections", nargs="*",
                     default=["case", "beyond", "lm", "transfer",
                              "roofline"])
@@ -40,7 +49,7 @@ def main(argv=None):
 
     if args.paper:
         from . import bench_paper
-        bench_paper.run(workers=workers)
+        bench_paper.run(workers=workers, quick=args.quick, bank=args.bank)
     if "case" in args.sections:
         from . import bench_case_studies
         bench_case_studies.run(fast=fast, workers=workers)

@@ -417,6 +417,184 @@ class Critter:
             wall += on_comp(rank, sid, sampler)
         return wall
 
+    # -- batched cold (forced) fast path --------------------------------------
+    #
+    # The ``*_cold`` interceptions are force-execute specializations used by
+    # the runtime's cold interpreter: the sample is drawn up front (the
+    # recording/reference run samples every kernel, so draws hoist and
+    # vectorize), the execute vote is constant-True, and three per-event
+    # writes are elided because nothing can observe them during a forced
+    # run:
+    #
+    # - ``skip_ok`` is all-False after ``reset_iteration`` and nothing sets
+    #   it under force (the vote paths that memoize verdicts are skipped),
+    #   so writing False is a no-op;
+    # - ``iter_exec`` is only read by the selective vote paths (never under
+    #   force) and reset at the next ``begin_iteration``; the interpreter
+    #   sets the run's statically-known (rank, sid) execution set in one
+    #   vectorized pass at the end (``finish_cold``);
+    # - ``mean_arr`` is only read by skip-prediction paths (never under
+    #   force); ``finish_cold`` mirrors the final K-bar means once per
+    #   touched (rank, sid) instead of once per event.  Eager aggregation
+    #   at collectives maintains its own mean_arr writes as usual.
+    #
+    # ``pred_live`` (eager) IS maintained per statistics write — collective
+    # aggregation reads it mid-run.
+    # Everything else — clocks, path profiles, Welford statistics, freq
+    # (read mid-run by Isend snapshots), seen (read by count adoption) —
+    # follows the exact operation order of the scalar methods, so reports,
+    # state, and RNG streams stay bit-identical (tests/test_cold_path.py).
+
+    def on_comp_cold(self, rank: int, sid: int, t: float) -> float:
+        """Force-execute charging of one computation kernel with a
+        precomputed sample (mirrors the execute branch of ``on_comp``; the
+        caller has grown column capacity over every sid of the program)."""
+        S = self.state
+        if self.update_stats:
+            stats = S.stats(rank, sid)
+            stats.update(t)
+            if self._eager:
+                self._note_stats(rank, sid, stats)
+        S.clock[rank] += t
+        S.measured_time[rank] += t
+        S.measured_comp[rank] += t
+        S.executed[rank] += 1
+        S.path_exec[rank] += t
+        S.path_comp[rank] += t
+        S.path_kernels[rank] += 1
+        S.freq[rank, sid] += 1
+        S.seen[rank, sid] = True
+        return t
+
+    def on_comp_block_cold(self, rank: int, block, ts) -> float:
+        """Force-execute charging of a fused run of computation kernels
+        with precomputed samples ``ts`` (Python floats, block order).
+
+        Scalar accumulators (clock, measured, path) are accumulated
+        sequentially over Python floats — the same additions in the same
+        order as per-event ``on_comp`` — and the Welford statistics of
+        each distinct kernel see their samples in block order
+        (``KernelStats.update_many``), so every derived quantity is
+        bit-identical to the scalar path."""
+        S = self.state
+        if self.update_stats:
+            eager = self._eager
+            uniq = block.uniq.tolist()
+            groups = block.group_indices()
+            for sid, idx in zip(uniq, groups):
+                stats = S.stats(rank, sid)
+                if len(idx) == block.n:
+                    stats.update_many(ts)
+                else:
+                    stats.update_many([ts[i] for i in idx])
+                if eager:
+                    self._note_stats(rank, sid, stats)
+        c = float(S.clock[rank])
+        mt = float(S.measured_time[rank])
+        mc = float(S.measured_comp[rank])
+        pe = float(S.path_exec[rank])
+        pc = float(S.path_comp[rank])
+        total = 0.0
+        for t in ts:
+            c += t
+            mt += t
+            mc += t
+            pe += t
+            pc += t
+            total += t
+        S.clock[rank] = c
+        S.measured_time[rank] = mt
+        S.measured_comp[rank] = mc
+        S.path_exec[rank] = pe
+        S.path_comp[rank] = pc
+        S.executed[rank] += block.n
+        S.path_kernels[rank] += block.n
+        S.freq[rank, block.uniq] += block.counts
+        S.seen[rank, block.uniq] = True
+        return total
+
+    def on_p2p_cold(self, src: int, dst: int, sid: int, t: float,
+                    overhead: float = 0.0) -> float:
+        """Force-execute completion of a blocking Send/Recv pair with a
+        precomputed sample (mirrors the execute branch of ``on_p2p``)."""
+        S = self.state
+        pe = S.path_exec
+        winner, loser = (src, dst) if pe[src] > pe[dst] else (dst, src)
+        if self._propagates:
+            wseen = S.seen[winner]
+            np.copyto(S.freq[loser], S.freq[winner], where=wseen)
+            S.seen[loser] |= wseen
+        pe[loser] = pe[winner]
+        S.path_comp[loser] = S.path_comp[winner]
+        S.path_comm[loser] = S.path_comm[winner]
+        S.path_kernels[loser] = S.path_kernels[winner]
+
+        clock = S.clock
+        done = max(clock[src], clock[dst]) + overhead + t
+        update = self.update_stats
+        eager = self._eager
+        for r in (src, dst):
+            if update:
+                stats = S.stats(r, sid)
+                stats.update(t)
+                if eager:
+                    self._note_stats(r, sid, stats)
+            S.measured_time[r] += t
+            S.executed[r] += 1
+            self._charge_comm(r, sid, t)
+        clock[src] = done
+        clock[dst] = done
+        return done
+
+    def on_isend_match_cold(self, src: int, dst: int, sid: int, t: float,
+                            snapshot, overhead: float = 0.0):
+        """Force-execute completion of a buffered Isend matched by a Recv
+        with a precomputed sample (mirrors the execute branch of
+        ``on_isend_match``; the sender-local vote is constant-True under
+        force, so the interpreter's post slots carry only the snapshot)."""
+        S = self.state
+        (p_exec, p_comp, p_comm, p_kc), post_freqs, post_clock = snapshot
+
+        if p_exec > S.path_exec[dst]:
+            if self._propagates and post_freqs is not None:
+                m = post_freqs.shape[0]
+                mask = post_freqs > 0
+                np.copyto(S.freq[dst, :m], post_freqs, where=mask)
+                S.seen[dst, :m] |= mask
+            S.path_exec[dst] = p_exec
+            S.path_comp[dst] = p_comp
+            S.path_comm[dst] = p_comm
+            S.path_kernels[dst] = p_kc
+
+        done = max(post_clock, S.clock[dst]) + overhead + t
+        if self.update_stats:
+            eager = self._eager
+            for r in (src, dst):
+                stats = S.stats(r, sid)
+                stats.update(t)
+                if eager:
+                    self._note_stats(r, sid, stats)
+        S.executed[src] += 1
+        S.executed[dst] += 1
+        S.measured_time[dst] += t
+        self._charge_comm(dst, sid, t)
+        S.clock[dst] = done
+        return done
+
+    def finish_cold(self, rows, cols) -> None:
+        """End-of-forced-run bulk pass: set ``iter_exec`` over the run's
+        statically-known (rank, sid) execution pairs and mirror the final
+        K-bar means into ``mean_arr`` (deferred from the per-event cold
+        interceptions above; collective interceptions used the scalar
+        methods and are already mirrored)."""
+        S = self.state
+        S.iter_exec[rows, cols] = True
+        if self.update_stats:
+            kbar = S.kbar
+            mean_arr = S.mean_arr
+            for r, s in zip(rows.tolist(), cols.tolist()):
+                mean_arr[r, s] = kbar[r][s].mean
+
     # ------------------------------------------------------------ collectives
 
     def on_coll(self, sid: int, comm, sampler, overhead: float = 0.0) -> float:

@@ -47,6 +47,16 @@ class EngineState:
     the count-adoption protocol needs: a dominated rank adopts the winner's
     counts only for kernels *the winner has seen*, keeping its own counts
     for the rest.
+
+    Forced-run liveness contract (the batched cold path relies on this —
+    see ``Critter.on_comp_cold``/``finish_cold``): during a forced run,
+    ``freq`` and ``seen`` are read mid-run (Isend snapshots, count
+    adoption) and must be written per event, while ``iter_exec``,
+    ``mean_arr`` and ``skip_ok`` are only consumed by the selective vote
+    and skip-prediction paths — never under force — so cold interceptions
+    may defer them to one bulk pass at the end of the run (``iter_exec``,
+    ``mean_arr``) or elide no-op writes entirely (``skip_ok``, all-False
+    after ``reset_iteration`` and never set under force).
     """
 
     __slots__ = ("n_ranks", "cap", "clock", "path_exec", "path_comp",

@@ -82,6 +82,36 @@ class KernelStats:
         if x > self.max_t:
             self.max_t = x
 
+    def update_many(self, xs) -> None:
+        """Fold a batch of samples, in order, with the exact arithmetic of
+        repeated ``update`` calls (same operations, same order — bitwise-
+        identical results; a Chan-style batch merge would NOT be).  The
+        engine's batched cold path uses this to amortize attribute access
+        over a fused kernel run; the memo caches below stay keyed on ``n``
+        and invalidate as usual."""
+        n = self.n
+        mean = self.mean
+        m2 = self.m2
+        total = self.total
+        min_t = self.min_t
+        max_t = self.max_t
+        for x in xs:
+            n += 1
+            delta = x - mean
+            mean += delta / n
+            m2 += delta * (x - mean)
+            total += x
+            if x < min_t:
+                min_t = x
+            if x > max_t:
+                max_t = x
+        self.n = n
+        self.mean = mean
+        self.m2 = m2
+        self.total = total
+        self.min_t = min_t
+        self.max_t = max_t
+
     def merge(self, other: "KernelStats") -> None:
         """Chan et al. parallel merge — used when propagating statistics
         across channels (aggregate_statistics in Figure 2)."""

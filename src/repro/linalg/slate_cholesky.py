@@ -33,38 +33,51 @@ def make_program(world: World, *, n: int, tile: int, lookahead: int,
         myrow, mycol = rank % pr, rank // pr
         TAG_LKK, TAG_ROW, TAG_COL = 0, 1, 2
 
+        # Ownership is block-cyclic, so "the tiles of column j this rank
+        # owns" is the arithmetic progression i ≡ myrow (mod pr), and "the
+        # distinct owners of a tile range, in first-touch order" is just
+        # the first min(pr, len) (resp. pc) elements of the range: the
+        # generators below enumerate these directly instead of scanning
+        # every tile and filtering by owner(), which dominated the cold
+        # (recording) run's generator cost.  The yielded op stream is
+        # bit-identical to the scan-and-filter form (pinned by
+        # tests/test_cold_path.py against a reference implementation).
+
+        def my_rows(lo):
+            """Rows i >= lo with i ≡ myrow (mod pr), ascending."""
+            return range(lo + ((myrow - lo) % pr), nt, pr)
+
         def panel(k):
             """potrf(k,k) + column-k trsms, with the factored tiles
             broadcast row-wise (for row-i updates) and the transposed
             panel broadcast column-wise (for the L_jk^T operands)."""
-            if owner(k, k) == rank:
+            kcol = pr * (k % pc)
+            if k % pr == myrow and k % pc == mycol:   # owner(k, k) == rank
                 yield Comp("potrf", (tile,))
-                # send L_kk down grid column (k % pc) to the trsm owners
-                sent = set()
-                for i in range(k + 1, nt):
-                    o = owner(i, k)
-                    if o != rank and o not in sent:
-                        sent.add(o)
+                # send L_kk down grid column (k % pc) to the trsm owners:
+                # distinct owners appear within the first pr rows below k
+                for i in range(k + 1, min(k + 1 + pr, nt)):
+                    o = (i % pr) + kcol
+                    if o != rank:
                         yield Isend(o, tb, (TAG_LKK, k))
             # trsm for owned tiles (i, k), i > k
-            my_tiles = [i for i in range(k + 1, nt) if owner(i, k) == rank]
-            if my_tiles and owner(k, k) != rank:
-                yield Recv(owner(k, k), tb, (TAG_LKK, k))
+            if k % pc != mycol:
+                return
+            my_tiles = my_rows(k + 1)
+            if my_tiles and k % pr != myrow:
+                yield Recv((k % pr) + kcol, tb, (TAG_LKK, k))
             for i in my_tiles:
                 yield Comp("trsm", (tile, tile))
                 # row-wise: L_ik to ranks in my grid row owning (i, j>k)
-                sent = set()
-                for j in range(k + 1, i + 1):
-                    o = owner(i, j)
-                    if o != rank and o not in sent:
-                        sent.add(o)
+                for j in range(k + 1, min(k + 1 + pc, i + 1)):
+                    o = myrow + pr * (j % pc)
+                    if o != rank:
                         yield Isend(o, tb, (TAG_ROW, k, i))
                 # column-wise: L_ik^T to ranks owning (i' > i, i)
-                sent = set()
-                for i2 in range(i, nt):
-                    o = owner(i2, i)
-                    if o != rank and o not in sent:
-                        sent.add(o)
+                icol = pr * (i % pc)
+                for i2 in range(i, min(i + pr, nt)):
+                    o = (i2 % pr) + icol
+                    if o != rank:
                         yield Isend(o, tb, (TAG_COL, k, i))
 
         def recv_for_update(k, i, j, got):
@@ -84,9 +97,9 @@ def make_program(world: World, *, n: int, tile: int, lookahead: int,
         def updates(k, js, got):
             """Trailing updates from panel k for tile-columns js."""
             for j in js:
-                for i in range(j, nt):
-                    if owner(i, j) != rank:
-                        continue
+                if j % pc != mycol:
+                    continue
+                for i in my_rows(j):
                     yield from recv_for_update(k, i, j, got)
                     if i == j:
                         yield Comp("syrk", (tile, tile))

@@ -141,6 +141,37 @@ class CostModel:
             self._bias[sig] = v
         return v
 
+    def batch_info(self, sigs):
+        """Vectorized-draw support for the engine's batched cold path.
+
+        Returns ``(det, sigma)`` — draw-order arrays of the per-signature
+        deterministic parts and lognormal sigmas — when a batch of
+        ``sigs`` can be sampled as ``det * exp(sigma * standard_normal(n))``
+        with the exact RNG stream of per-event ``sample`` calls:
+        ``Generator.normal(0, s)`` is bitwise ``standard_normal() * s``
+        and vectorized fills consume the bit stream identically to
+        repeated scalar draws, so this holds whenever every per-event draw
+        is the single normal — i.e. the straggler branch is off.  With
+        stragglers on (each event draws normal + uniform(s), a
+        data-dependent interleaving no vector call reproduces) returns
+        ``None`` and the engine falls back to per-event scalar ``sample``
+        calls, which preserve the stream by construction."""
+        if self.straggler_p > 0 or not sigs:
+            return None
+        det_cache = self._det
+        n = len(sigs)
+        det = np.empty(n)
+        sigma = np.empty(n)
+        comm_noise, noise = self.comm_noise, self.noise
+        for i, sig in enumerate(sigs):
+            d = det_cache.get(sig)
+            if d is None:
+                d = self.base_time(sig) * self._bias_of(sig)
+                det_cache[sig] = d
+            det[i] = d
+            sigma[i] = comm_noise if sig.kind == "comm" else noise
+        return det, sigma
+
     def sample(self, sig: Signature, rng: np.random.Generator) -> float:
         det = self._det.get(sig)
         if det is None:

@@ -12,6 +12,12 @@ COLL_OPS = (
     "alltoall", "barrier",
 )
 
+# engine dispatch codes, one per op family.  The runtime dispatches on
+# ``op.KIND`` (a small-int class attribute) rather than ``type(op) is X``
+# identity, so user subclasses of the op classes (e.g. a Comp carrying
+# extra bookkeeping) flow through the engine unchanged.
+KIND_COMP, KIND_COLL, KIND_SEND, KIND_RECV, KIND_ISEND, KIND_WAIT = range(6)
+
 
 class Comp:
     """A local computation kernel: a routine with a particular input size.
@@ -25,6 +31,7 @@ class Comp:
     ``simmpi.runtime``).
     """
 
+    KIND = KIND_COMP
     __slots__ = ("name", "params", "flops", "sig_id")
 
     def __init__(self, name, params=(), flops=None):
@@ -40,6 +47,7 @@ class Comp:
 class Coll:
     """A blocking collective on a communicator."""
 
+    KIND = KIND_COLL
     __slots__ = ("op", "comm", "nbytes", "root", "sig_id")
 
     def __init__(self, op, comm, nbytes, root=0):
@@ -60,6 +68,7 @@ def Barrier(comm):
 class Send:
     """Blocking (rendezvous) point-to-point send."""
 
+    KIND = KIND_SEND
     __slots__ = ("dst", "nbytes", "tag", "sig_id")
 
     def __init__(self, dst, nbytes, tag=0):
@@ -75,6 +84,7 @@ class Send:
 class Recv:
     """Blocking point-to-point receive (matches Send or Isend)."""
 
+    KIND = KIND_RECV
     __slots__ = ("src", "nbytes", "tag")
 
     def __init__(self, src, nbytes, tag=0):
@@ -95,6 +105,7 @@ class Isend:
     made from the sender's local state and travels with the message.
     """
 
+    KIND = KIND_ISEND
     __slots__ = ("dst", "nbytes", "tag", "sig_id")
 
     def __init__(self, dst, nbytes, tag=0):
@@ -111,6 +122,7 @@ class Wait:
     """Wait on a request handle returned by Isend (buffered => no-op cost,
     but the interception point exists, matching Figure 2's MPI_Wait)."""
 
+    KIND = KIND_WAIT
     __slots__ = ("handle",)
 
     def __init__(self, handle):

@@ -26,19 +26,33 @@ Hot-path design (see also core.critter):
   integer id once, cached on the op instance (ops are reused via trace
   replay), so the per-event cost is an attribute read instead of a
   dataclass hash;
-- **event-program compilation**: rank programs are generators whose op
-  streams do not depend on engine feedback (the only value sent back is
-  the opaque Isend handle, consumed by Wait), and communication matching
-  in this engine is purely structural — independent of sampled times.  The
+- **record/replay split**: rank programs are generators whose op streams do
+  not depend on engine feedback (the only value sent back is the opaque
+  Isend handle, consumed by Wait), and communication matching in this
+  engine is purely structural — independent of sampled times.  The
   interleaved sequence of Critter interceptions is therefore identical
   across iterations of one configuration, so the first execution of a
-  program factory records it as a flat event program; subsequent
-  iterations (the common case — the tuner runs trials-many iterations per
-  configuration) execute that program directly, skipping generators,
-  matching queues, and the scheduler entirely.  Runs of consecutive
-  computation kernels of one rank are fused into blocks that the profiler
-  can charge in one vectorized step.  Pass ``trace_cache=False`` for
-  programs whose op stream is nondeterministic or feedback-dependent;
+  program factory runs a *structural recording pass* (generators, matching
+  queues, scheduler — no Critter, no RNG) that emits a flat event program;
+  every iteration, including the first, then executes that program through
+  an interpreter, skipping generators and matching entirely on all
+  subsequent iterations (the common case — the tuner runs trials-many
+  iterations per configuration).  Runs of consecutive computation kernels
+  of one rank are fused into blocks that the profiler can charge in one
+  vectorized step.  Pass ``trace_cache=False`` for programs whose op
+  stream is nondeterministic or feedback-dependent; that path interleaves
+  recording-free matching with scalar interception exactly like the seed
+  engine;
+- **batched cold runs**: forced (recording/reference) executions sample
+  every kernel, so the cold interpreter pre-splits the event program into
+  *segments* bounded by RNG-consuming communication events and draws each
+  segment's computation-kernel samples in one vectorized call when the
+  cost model supports it (``CostModel.batch_info``: lognormal noise with
+  the straggler branch off), falling back to per-event scalar draws — the
+  same calls in the same order — when it does not.  Charging is batched
+  per fused block (``Critter.on_comp_block_cold``) with sequential
+  float accumulation, so path metrics, statistics, and the sampler RNG
+  stream stay bit-identical to the scalar path;
 - **runnable queue**: first-run scheduling pops a (sweep, rank) heap
   instead of scanning all ranks per pass, preserving the exact round-robin
   order of the seed engine (a rank unblocked by a lower-ranked completer
@@ -59,7 +73,8 @@ import numpy as np
 from repro.core.critter import Critter, IterationReport
 from repro.core.signatures import Signature, comm_sig, comp_sig, p2p_sig
 from .comm import World
-from .ops import Coll, Comp, Isend, Recv, Send, Wait
+from .ops import (KIND_COLL, KIND_COMP, KIND_ISEND, KIND_RECV, KIND_SEND,
+                  KIND_WAIT)
 
 RUNNABLE, BLOCKED, DONE = 0, 1, 2
 
@@ -82,7 +97,8 @@ class _CompBlock:
     compilation: interned signature ids plus the unique-id/count arrays the
     profiler's vectorized skip path charges in one step."""
 
-    __slots__ = ("sids", "sids_np", "uniq", "counts", "n", "max_sid")
+    __slots__ = ("sids", "sids_np", "uniq", "counts", "n", "max_sid",
+                 "groups")
 
     def __init__(self, sids: List[int]):
         self.sids = sids
@@ -90,6 +106,22 @@ class _CompBlock:
         self.uniq, self.counts = np.unique(self.sids_np, return_counts=True)
         self.n = len(sids)
         self.max_sid = int(self.sids_np.max())
+        # lazy per-unique-sid position lists (cold batched charging)
+        self.groups: Optional[List[List[int]]] = None
+
+    def group_indices(self) -> List[List[int]]:
+        """Positions of each unique sid's samples within the block, in
+        block order (so per-sid Welford updates see samples in the same
+        order as per-event updates)."""
+        g = self.groups
+        if g is None:
+            if len(self.uniq) == 1:
+                g = [list(range(self.n))]
+            else:
+                g = [np.nonzero(self.sids_np == u)[0].tolist()
+                     for u in self.uniq.tolist()]
+            self.groups = g
+        return g
 
 
 # minimum run length worth a vectorized block (below this the fancy-index
@@ -99,19 +131,66 @@ _MIN_BLOCK = 4
 # event-program opcodes (first element of each event tuple)
 EV_COMP, EV_BLOCK, EV_COLL, EV_P2P, EV_IPOST, EV_IMATCH = range(6)
 
+# cold-program step opcodes
+CS_COMP, CS_BLOCK, CS_IPOST, CS_COLL, CS_P2P, CS_IMATCH = range(6)
+
 
 class _EventProgram:
     """The flat interception sequence of one configuration run.
 
     events -- list of opcode tuples (see the EV_* constants)
     n_slots -- number of isend post->match payload slots
+    cold -- lazily-built batched cold-run program (_ColdProgram)
     """
 
-    __slots__ = ("events", "n_slots")
+    __slots__ = ("events", "n_slots", "cold")
 
     def __init__(self, events, n_slots):
         self.events = events
         self.n_slots = n_slots
+        self.cold: Optional[_ColdProgram] = None
+
+
+class _ColdProgram:
+    """The event program re-sliced for batched forced (cold) execution.
+
+    A forced run samples EVERY kernel — computation and communication — in
+    step order, so the whole run's draw sequence is known statically:
+    ``draw_sigs`` lists the sampled signatures in consumption order (one
+    per CS_COMP / CS_COLL / CS_P2P / CS_IMATCH step, ``block.n`` per
+    CS_BLOCK step), and the interpreter walks ``steps`` with a running
+    cursor into the draw buffer.  When the cost model can batch
+    (``batch_info``: lognormal noise, straggler branch off), all draws
+    come from ONE vectorized ``standard_normal`` call — bit-equal to the
+    scalar stream because ``Generator.normal(0, s)`` is exactly
+    ``standard_normal() * s`` and vectorized fills consume the bit stream
+    identically to repeated scalar draws; otherwise each step draws through
+    the scalar timer at its cursor position, the same calls in the same
+    order as the interleaved seed engine.
+
+    steps -- (CS_COMP, rank, sid, sig) | (CS_BLOCK, rank, block, sigs)
+             | (CS_IPOST, rank, slot) | (CS_COLL, sid, comm)
+             | (CS_P2P, src, dst, sid, sig)
+             | (CS_IMATCH, src, dst, sid, slot, sig)
+    exec_rows/exec_cols -- the statically-known (rank, sid) pairs executed
+             by non-collective steps, for Critter.finish_cold's deferred
+             iter_exec/mean_arr bulk pass
+    batch -- lazy cost-model batch support: None until probed, False when
+             the timer cannot batch, else (det, sigma) draw-order arrays
+    """
+
+    __slots__ = ("steps", "draw_sigs", "n_slots", "max_sid", "exec_rows",
+                 "exec_cols", "batch")
+
+    def __init__(self, steps, draw_sigs, n_slots, max_sid, exec_pairs):
+        self.steps = steps
+        self.draw_sigs = draw_sigs
+        self.n_slots = n_slots
+        self.max_sid = max_sid
+        pairs = sorted(exec_pairs)
+        self.exec_rows = np.array([p[0] for p in pairs], dtype=np.intp)
+        self.exec_cols = np.array([p[1] for p in pairs], dtype=np.intp)
+        self.batch = None
 
 
 class _CollSite:
@@ -140,6 +219,12 @@ class Runtime:
         self._rng = np.random.default_rng(seed)
         self._intern = world.interner.intern
         self._sig_cache: Dict[tuple, int] = {}
+        # batched cold-run sampling: available when the timer is a bound
+        # method of an object exposing ``batch_info(sigs) -> (det, sigma)
+        # | None`` (CostModel); anything else falls back to per-event
+        # scalar draws, which preserve the RNG stream by construction
+        self._batch_info = getattr(getattr(timer, "__self__", None),
+                                   "batch_info", None)
         # program_factory -> per-rank recorded op traces (weak: traces die
         # with the configuration's program factory)
         self._traces = weakref.WeakKeyDictionary()
@@ -169,6 +254,172 @@ class Runtime:
             sid = self._intern(p2p_sig(name, nbytes))
             self._sig_cache[key] = sid
         return sid
+
+    # -- structural recording pass --------------------------------------------
+
+    def _record(self, program_factory) -> list:
+        """Run the rank generators to exhaustion, matching communication
+        structurally, and record the flat interception sequence WITHOUT
+        invoking the Critter protocol or consuming sampler RNG.
+
+        Matching is independent of sampled times, so the recorded program
+        replayed through the interpreters produces interceptions (and RNG
+        consumption) bit-identical to the historical interleaved pass.  A
+        deadlock or collective mismatch therefore raises before any
+        profiler state is touched.
+
+        KEEP IN SYNC with ``_run_live``: both implement the same
+        structural matching semantics (collective site validation, p2p
+        queues, heap sweeps, deadlock reporting); this copy exists so the
+        recording pass pays zero interception branches per op.  Any
+        change to matching must land in both; tests/test_cold_path.py and
+        tests/test_golden_reports.py pin their equivalence."""
+        world = self.world
+        n = world.size
+        gens = [program_factory(r, world) for r in range(n)]
+        events: list = []
+        append = events.append
+        status = [RUNNABLE] * n
+        blocked_on: List[Optional[object]] = [None] * n
+        coll_sites: Dict[Tuple[int, int], _CollSite] = {}
+        coll_counts: Dict[Tuple[int, int], int] = {}
+        # send entry: (sender_rank, sig_id, slot_or_None); None = rendezvous
+        sends: Dict[tuple, deque] = {}
+        recvs: Dict[tuple, deque] = {}
+        state = [0, 0, n]        # isend slot counter, next handle, live
+
+        def advance(r, sweep, value=None):
+            """Run rank r until it blocks or finishes."""
+            gen = gens[r]
+            while True:
+                try:
+                    op = gen.send(value)
+                except StopIteration:
+                    status[r] = DONE
+                    state[2] -= 1
+                    return
+                value = None
+                k = op.KIND
+                if k == KIND_COMP:
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._comp_sid(op.name, op.params)
+                    append((EV_COMP, r, sid))
+                    continue
+                if k == KIND_COLL:
+                    comm = op.comm
+                    key = (comm.id, r)
+                    idx = coll_counts.get(key, 0)
+                    coll_counts[key] = idx + 1
+                    skey = (comm.id, idx)
+                    site = coll_sites.get(skey)
+                    if site is None:
+                        sid = op.sig_id
+                        if sid is None:
+                            sid = op.sig_id = \
+                                self._coll_sid(op.op, comm, op.nbytes)
+                        site = _CollSite(op.op, op.nbytes, comm.size, sid)
+                        coll_sites[skey] = site
+                    elif site.op != op.op:
+                        raise RuntimeError(
+                            f"collective mismatch on comm {comm.id} site {idx}:"
+                            f" {site.op} vs {op.op} (rank {r})")
+                    elif site.nbytes != op.nbytes:
+                        raise RuntimeError(
+                            f"collective byte-count mismatch on comm "
+                            f"{comm.id} site {idx} ({site.op}): "
+                            f"{site.nbytes}B vs {op.nbytes}B (rank {r})")
+                    site.arrived.append(r)
+                    if len(site.arrived) < site.needed:
+                        status[r] = BLOCKED
+                        blocked_on[r] = op
+                        return
+                    del coll_sites[skey]
+                    append((EV_COLL, site.sig_id, comm))
+                    for rr in site.arrived:
+                        if rr != r:
+                            status[rr] = RUNNABLE
+                            blocked_on[rr] = None
+                            heappush(heap,
+                                     (sweep if rr > r else sweep + 1, rr))
+                    continue
+                if k == KIND_SEND:
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._p2p_sid("send", op.nbytes)
+                    pkey = (r, op.dst, op.tag)
+                    q = recvs.get(pkey)
+                    if q:
+                        q.popleft()
+                        append((EV_P2P, r, op.dst, sid))
+                        dst = op.dst
+                        status[dst] = RUNNABLE
+                        blocked_on[dst] = None
+                        heappush(heap,
+                                 (sweep if dst > r else sweep + 1, dst))
+                        continue
+                    sends.setdefault(pkey, deque()).append((r, sid, None))
+                    status[r] = BLOCKED
+                    blocked_on[r] = op
+                    return
+                if k == KIND_RECV:
+                    pkey = (op.src, r, op.tag)
+                    q = sends.get(pkey)
+                    if q:
+                        src, sid, slot = q.popleft()
+                        if slot is None:   # blocking sender, rendezvous
+                            append((EV_P2P, src, r, sid))
+                            status[src] = RUNNABLE
+                            blocked_on[src] = None
+                            heappush(heap,
+                                     (sweep if src > r else sweep + 1, src))
+                        else:              # buffered isend
+                            append((EV_IMATCH, src, r, sid, slot))
+                        continue
+                    recvs.setdefault(pkey, deque()).append(r)
+                    status[r] = BLOCKED
+                    blocked_on[r] = op
+                    return
+                if k == KIND_ISEND:
+                    sid = op.sig_id
+                    if sid is None:
+                        sid = op.sig_id = self._p2p_sid("send", op.nbytes)
+                    slot = state[0]
+                    state[0] = slot + 1
+                    append((EV_IPOST, r, sid, slot))
+                    pkey = (r, op.dst, op.tag)
+                    q = recvs.get(pkey)
+                    if q:
+                        rcv = q.popleft()
+                        append((EV_IMATCH, r, rcv, sid, slot))
+                        status[rcv] = RUNNABLE
+                        blocked_on[rcv] = None
+                        heappush(heap,
+                                 (sweep if rcv > r else sweep + 1, rcv))
+                    else:
+                        sends.setdefault(pkey, deque()).append((r, sid, slot))
+                    state[1] += 1
+                    value = state[1]
+                    continue
+                if k == KIND_WAIT:
+                    continue
+                raise TypeError(f"rank {r} yielded unknown op {op!r}")
+
+        heap: List[Tuple[int, int]] = [(0, r) for r in range(n)]
+        while heap:
+            sweep, r = heappop(heap)
+            if status[r] == RUNNABLE:
+                advance(r, sweep)
+        if state[2] > 0:
+            blocked = [(r, blocked_on[r]) for r in range(n)
+                       if status[r] == BLOCKED]
+            if blocked:
+                detail = ", ".join(f"rank {r}: {op!r}"
+                                   for r, op in blocked[:8])
+                raise DeadlockError(
+                    f"{len(blocked)} ranks blocked with no progress: "
+                    f"{detail}")
+        return events
 
     # -- event-program compilation --------------------------------------------
 
@@ -210,6 +461,55 @@ class Runtime:
             flush()
         return _EventProgram(out, n_slots)
 
+    def _build_cold(self, prog: _EventProgram) -> _ColdProgram:
+        """Flatten the event program into cold steps plus the forced run's
+        static draw sequence (see _ColdProgram)."""
+        sigs = self.world.interner.sigs
+        steps: list = []
+        draw_sigs: list = []
+        exec_pairs: set = set()
+        max_sid = 0
+        for ev in prog.events:
+            k = ev[0]
+            if k == EV_COMP:
+                sid = ev[2]
+                steps.append((CS_COMP, ev[1], sid, sigs[sid]))
+                draw_sigs.append(sigs[sid])
+                exec_pairs.add((ev[1], sid))
+            elif k == EV_BLOCK:
+                block = ev[2]
+                bsigs = [sigs[s] for s in block.sids]
+                steps.append((CS_BLOCK, ev[1], block, bsigs))
+                draw_sigs.extend(bsigs)
+                exec_pairs.update((ev[1], s) for s in block.uniq.tolist())
+                sid = block.max_sid
+            elif k == EV_IPOST:
+                sid = ev[2]
+                steps.append((CS_IPOST, ev[1], ev[3]))
+            elif k == EV_COLL:
+                sid = ev[1]
+                steps.append((CS_COLL, sid, ev[2]))
+                draw_sigs.append(sigs[sid])
+            elif k == EV_P2P:
+                sid = ev[3]
+                steps.append((CS_P2P, ev[1], ev[2], sid, sigs[sid]))
+                draw_sigs.append(sigs[sid])
+                exec_pairs.add((ev[1], sid))
+                exec_pairs.add((ev[2], sid))
+            else:
+                sid = ev[3]
+                steps.append((CS_IMATCH, ev[1], ev[2], sid, ev[4],
+                              sigs[sid]))
+                draw_sigs.append(sigs[sid])
+                exec_pairs.add((ev[1], sid))
+                exec_pairs.add((ev[2], sid))
+            if sid > max_sid:
+                max_sid = sid
+        return _ColdProgram(steps, draw_sigs, prog.n_slots, max_sid,
+                            exec_pairs)
+
+    # -- interpreters ---------------------------------------------------------
+
     def _run_events(self, prog: _EventProgram, sampler) -> None:
         """Execute a compiled event program: the scheduler, matching queues
         and generators are gone; only the interception sequence remains."""
@@ -242,33 +542,139 @@ class Runtime:
             else:
                 on_coll(ev[1], ev[2], sampler, overhead)
 
+    def _run_events_cold(self, cold: _ColdProgram, sampler) -> None:
+        """Execute a cold program under force_execute.
+
+        When the cost model batches, every sample of the run — computation
+        AND communication — is drawn up front in one vectorized call and
+        each step consumes its precomputed time at a running cursor;
+        otherwise each sampling step draws through the scalar timer at its
+        own position, which is the same call sequence as the interleaved
+        seed engine.  Communication interceptions reuse the scalar Critter
+        methods (a one-shot closure injects the predrawn sample), so the
+        protocol code has a single implementation."""
+        critter = self.critter
+        critter.state.ensure(cold.max_sid)
+        rng = self._rng
+        timer = self.timer
+        overhead = self.overhead
+        on_comp_cold = critter.on_comp_cold
+        on_comp_block_cold = critter.on_comp_block_cold
+        on_coll = critter.on_coll
+        on_p2p_cold = critter.on_p2p_cold
+        on_isend_match_cold = critter.on_isend_match_cold
+        isend_snapshot = critter.isend_snapshot
+        slots: List[Optional[tuple]] = [None] * cold.n_slots
+
+        info = cold.batch
+        if info is None:
+            info = False
+            if self._batch_info is not None and cold.draw_sigs:
+                bi = self._batch_info(cold.draw_sigs)
+                if bi is not None:
+                    info = bi
+            cold.batch = info
+        if info is False:
+            ts = None
+        else:
+            det, sigma = info
+            ts = (det * np.exp(
+                sigma * rng.standard_normal(len(det)))).tolist()
+        cur = 0
+
+        for st in cold.steps:
+            k = st[0]
+            if k == CS_COMP:
+                if ts is None:
+                    t = timer(st[3], rng)
+                else:
+                    t = ts[cur]
+                    cur += 1
+                on_comp_cold(st[1], st[2], t)
+            elif k == CS_IPOST:
+                slots[st[2]] = isend_snapshot(st[1])
+            elif k == CS_IMATCH:
+                if ts is None:
+                    t = timer(st[5], rng)
+                else:
+                    t = ts[cur]
+                    cur += 1
+                on_isend_match_cold(st[1], st[2], st[3], t, slots[st[4]],
+                                    overhead)
+            elif k == CS_BLOCK:
+                block = st[2]
+                if ts is None:
+                    tsl = [timer(sig, rng) for sig in st[3]]
+                else:
+                    end = cur + block.n
+                    tsl = ts[cur:end]
+                    cur = end
+                on_comp_block_cold(st[1], block, tsl)
+            elif k == CS_P2P:
+                if ts is None:
+                    t = timer(st[4], rng)
+                else:
+                    t = ts[cur]
+                    cur += 1
+                on_p2p_cold(st[1], st[2], st[3], t, overhead)
+            else:
+                if ts is None:
+                    smp = sampler
+                else:
+                    smp = lambda sig, _t=ts[cur]: _t  # noqa: E731
+                    cur += 1
+                on_coll(st[1], st[2], smp, overhead)
+        critter.finish_cold(cold.exec_rows, cold.exec_cols)
+
     # -- main loop ------------------------------------------------------------
 
     def run(self, program_factory, *, force_execute: bool = False,
             update_stats: bool = True) -> RunResult:
-        world = self.world
         critter = self.critter
         critter.begin_iteration(force_execute=force_execute,
                                 update_stats=update_stats)
         rng = self._rng
         timer = self.timer
         sampler = lambda sig: timer(sig, rng)  # noqa: E731
-        overhead = self.overhead
 
-        n = world.size
-        prog = None
-        if self.trace_cache:
-            try:
-                prog = self._traces.get(program_factory)
-            except TypeError:            # unhashable/unweakrefable factory
-                prog = None
-        if prog is not None:
-            self._run_events(prog, sampler)
+        if not self.trace_cache:
+            self._run_live(program_factory, sampler)
             return RunResult.from_report(critter.report())
 
+        try:
+            prog = self._traces.get(program_factory)
+        except TypeError:            # unhashable/unweakrefable factory
+            prog = None
+        if prog is None:
+            prog = self._compile_events(self._record(program_factory))
+            try:
+                self._traces[program_factory] = prog
+            except TypeError:
+                pass
+        if force_execute:
+            cold = prog.cold
+            if cold is None:
+                cold = prog.cold = self._build_cold(prog)
+            self._run_events_cold(cold, sampler)
+        else:
+            self._run_events(prog, sampler)
+        return RunResult.from_report(critter.report())
+
+    def _run_live(self, program_factory, sampler) -> None:
+        """The seed engine's interleaved pass (``trace_cache=False``):
+        generators, structural matching, and scalar Critter interception in
+        one loop, nothing recorded.  Kept for programs whose op streams are
+        nondeterministic or feedback-dependent — and as the reference
+        implementation the recorded paths are pinned against
+        (tests/test_cold_path.py, tests/test_golden_reports.py).
+
+        KEEP IN SYNC with ``_record``: same structural matching semantics,
+        see the note there."""
+        world = self.world
+        critter = self.critter
+        overhead = self.overhead
+        n = world.size
         gens = [program_factory(r, world) for r in range(n)]
-        recording = self.trace_cache
-        events = [] if recording else None
         isend_slots = [0]
         status = [RUNNABLE] * n
         blocked_on: List[Optional[object]] = [None] * n
@@ -284,30 +690,27 @@ class Runtime:
         # engine's sorted round-robin sweeps exactly
         heap: List[Tuple[int, int]] = [(0, r) for r in range(n)]
 
-        live = n
+        live = [n]
 
         def advance(r, sweep, value=None):
             """Run rank r until it blocks or finishes."""
-            nonlocal live
             gen = gens[r]
             while True:
                 try:
                     op = gen.send(value)
                 except StopIteration:
                     status[r] = DONE
-                    live -= 1
+                    live[0] -= 1
                     return
                 value = None
-                cls = op.__class__
-                if cls is Comp:
+                k = op.KIND
+                if k == KIND_COMP:
                     sid = op.sig_id
                     if sid is None:
                         sid = op.sig_id = self._comp_sid(op.name, op.params)
-                    if recording:
-                        events.append((EV_COMP, r, sid))
                     critter.on_comp(r, sid, sampler)
                     continue
-                if cls is Coll:
+                if k == KIND_COLL:
                     comm = op.comm
                     key = (comm.id, r)
                     idx = coll_counts.get(key, 0)
@@ -337,8 +740,6 @@ class Runtime:
                         return
                     # complete the collective
                     del coll_sites[skey]
-                    if recording:
-                        events.append((EV_COLL, site.sig_id, comm))
                     critter.on_coll(site.sig_id, comm, sampler, overhead)
                     for rr in site.arrived:
                         if rr != r:
@@ -347,7 +748,7 @@ class Runtime:
                             heappush(heap,
                                      (sweep if rr > r else sweep + 1, rr))
                     continue
-                if cls is Send:
+                if k == KIND_SEND:
                     sid = op.sig_id
                     if sid is None:
                         sid = op.sig_id = self._p2p_sid("send", op.nbytes)
@@ -355,8 +756,6 @@ class Runtime:
                     q = recvs.get(pkey)
                     if q:
                         q.popleft()
-                        if recording:
-                            events.append((EV_P2P, r, op.dst, sid))
                         vote = critter.p2p_vote(r, sid)
                         critter.on_p2p(r, op.dst, sid, sampler, vote,
                                        overhead)
@@ -371,14 +770,12 @@ class Runtime:
                     status[r] = BLOCKED
                     blocked_on[r] = op
                     return
-                if cls is Recv:
+                if k == KIND_RECV:
                     pkey = (op.src, r, op.tag)
                     q = sends.get(pkey)
                     if q:
                         src, sid, vote, snapshot, slot = q.popleft()
                         if snapshot is None:   # blocking sender, rendezvous
-                            if recording:
-                                events.append((EV_P2P, src, r, sid))
                             vote = critter.p2p_vote(src, sid)
                             critter.on_p2p(src, r, sid, sampler, vote,
                                            overhead)
@@ -387,8 +784,6 @@ class Runtime:
                             heappush(heap,
                                      (sweep if src > r else sweep + 1, src))
                         else:                  # buffered isend
-                            if recording:
-                                events.append((EV_IMATCH, src, r, sid, slot))
                             critter.on_isend_match(src, r, sid, sampler,
                                                    vote, snapshot, overhead)
                         continue
@@ -396,22 +791,18 @@ class Runtime:
                     status[r] = BLOCKED
                     blocked_on[r] = op
                     return
-                if cls is Isend:
+                if k == KIND_ISEND:
                     sid = op.sig_id
                     if sid is None:
                         sid = op.sig_id = self._p2p_sid("send", op.nbytes)
                     slot = isend_slots[0]
                     isend_slots[0] = slot + 1
-                    if recording:
-                        events.append((EV_IPOST, r, sid, slot))
                     vote = critter.p2p_vote(r, sid)
                     snapshot = critter.isend_snapshot(r)
                     pkey = (r, op.dst, op.tag)
                     q = recvs.get(pkey)
                     if q:
                         rcv = q.popleft()
-                        if recording:
-                            events.append((EV_IMATCH, r, rcv, sid, slot))
                         critter.on_isend_match(r, rcv, sid, sampler, vote,
                                                snapshot, overhead)
                         status[rcv] = RUNNABLE
@@ -424,7 +815,7 @@ class Runtime:
                     next_handle[0] += 1
                     value = next_handle[0]
                     continue
-                if cls is Wait:
+                if k == KIND_WAIT:
                     # buffered isend: completion is free; the interception
                     # point exists but statistics were updated at match time
                     continue
@@ -434,7 +825,7 @@ class Runtime:
             sweep, r = heappop(heap)
             if status[r] == RUNNABLE:
                 advance(r, sweep)
-        if live > 0:
+        if live[0] > 0:
             blocked = [(r, blocked_on[r]) for r in range(n)
                        if status[r] == BLOCKED]
             if blocked:
@@ -443,10 +834,3 @@ class Runtime:
                 raise DeadlockError(
                     f"{len(blocked)} ranks blocked with no progress: "
                     f"{detail}")
-        elif recording:
-            try:
-                self._traces[program_factory] = self._compile_events(events)
-            except TypeError:
-                pass
-
-        return RunResult.from_report(critter.report())
