@@ -4,27 +4,32 @@ of LM step-function configurations (reduced archs, real CPU timing).
 For each policy x tolerance: exhaustively benchmark the StepKnobs space
 with SelectiveTimer; report autotuning speedup (vs full re-timing), mean
 prediction error vs a directly-prior full execution, and whether the chosen
-configuration matches the full-execution optimum.
+configuration matches the full-execution optimum.  A racing section then
+runs the same space through wall-clock successive elimination
+(``LMStudy.race``: each round one selective trial per survivor, prune on
+CI separation) and reports the winner and its measured cost next to the
+exhaustive study's — the search-space-pruning composition the paper
+suggests, on real timings.
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.api import AutotuneSession, WallClockBackend
 from repro.tune import LMStudy
 
 from .common import fmt_table, save_rows
 
 
 def run_arch(arch: str, *, policies=("conditional", "local", "eager"),
-             eps=(0.5, 0.25, 0.1), iters=3, max_configs=8, seed=0):
+             eps=(0.5, 0.25, 0.1), iters=3, max_configs=8, seed=0,
+             race_tolerance=0.25):
     study = LMStudy(arch, batch=2, seq=32, seed=seed)
-    session = AutotuneSession(study.search_space(max_configs),
-                              backend=WallClockBackend(study.kernels_of),
-                              trials=iters, min_samples=3)
-    # wall-clock measurements stay serial: forked workers would contend
-    # for the CPU and corrupt each other's timings
+    session = study.session(max_configs=max_configs, trials=iters,
+                            min_samples=3)
+    # wall-clock measurements stay serial: the scheduler keeps
+    # non-parallel_safe backends on the in-process executor (forked
+    # workers would contend for the CPU and corrupt each other's timings)
     results = session.sweep(policies=list(policies), tolerances=list(eps))
     rows = []
     for r in results:
@@ -35,6 +40,24 @@ def run_arch(arch: str, *, policies=("conditional", "local", "eager"),
             "optimum_match": r.chosen.name == r.true_best.name,
             "chosen": r.chosen.name,
         })
+    # racing: wall-clock successive elimination over the same space
+    raced = study.race(tolerance=race_tolerance, max_configs=max_configs,
+                       min_samples=3)
+    exhaustive_cost = min(r.selective_tuning_time for r in results)
+    # racing has no full-execution reference of its own: judge its winner
+    # against the exhaustive studies' full-execution optima (per-study
+    # true_best; a set because wall-clock noise can flip near-ties)
+    optima = {r.true_best.name for r in results}
+    rows.append({
+        "arch": arch, "policy": f"racing/{raced.policy}",
+        "tolerance": raced.tolerance, "speedup": None,
+        "mean_error": None,
+        "optimum_match": raced.extra["best"] in optima,
+        "chosen": raced.extra["best"],
+        "racing_cost_s": raced.extra["cost"],
+        "racing_iterations": raced.extra["total_iterations"],
+        "exhaustive_cost_s": exhaustive_cost,
+    })
     return rows
 
 
@@ -49,6 +72,12 @@ def run(fast=True, archs=None):
         print(f"\n== LM autotune: {arch} (reduced, measured) ==")
         print(fmt_table(rows, ("policy", "tolerance", "speedup",
                                "mean_error", "optimum_match", "chosen")))
+        race_row = rows[-1]
+        print(f"racing winner {race_row['chosen']!r} in "
+              f"{race_row['racing_iterations']} iterations, "
+              f"{race_row['racing_cost_s']:.3g}s measured "
+              f"(exhaustive best-policy cost "
+              f"{race_row['exhaustive_cost_s']:.3g}s)")
     save_rows("lm_autotune", all_rows)
     return all_rows
 

@@ -20,6 +20,14 @@ from a recorded ``StatisticsBank`` (repro.api.transfer) — the nightly job
 seeds from the CI-scale Capital bank recorded by ``bench_transfer``
 (``results/capital-cholesky-ci_stats_bank.json``), exercising the
 ROADMAP's warm-started paper-scale sweep end to end.
+
+Sweeps run through ``repro.api.scheduler``: ``--share-stats`` streams
+each completed sweep point's statistics bank into the shared prior of
+points dispatched later (mid-sweep warm starts; ``--deterministic``
+defers the sharing to checkpoint boundaries), and ``--scale mid`` runs
+the beyond-Capital stepping-stone geometry (SLATE Cholesky on 256 real
+ranks) whose warm-started artifact is recorded under
+``results/paper_case_studies_mid.json``.
 """
 
 from __future__ import annotations
@@ -32,7 +40,7 @@ from repro.linalg.studies import STUDIES
 from .common import ART, fmt_table, save_rows, sweep_study
 
 COLS = ("study", "policy", "tolerance", "speedup", "mean_error",
-        "mean_comp_error", "optimum_quality", "bench_wall_s")
+        "mean_comp_error", "optimum_quality", "chosen", "bench_wall_s")
 
 DEFAULT_STUDIES = ("capital-cholesky",)
 DEFAULT_POLICIES = ("conditional", "eager")
@@ -44,7 +52,9 @@ QUICK_EPS = (0.25,)
 
 def run(studies=DEFAULT_STUDIES, policies=DEFAULT_POLICIES,
         eps=DEFAULT_EPS, trials: int = 3, workers: int = 0,
-        quick: bool = False, bank=None):
+        quick: bool = False, bank=None, discount: float = 0.5,
+        scale: str = "paper", share_stats: bool = False,
+        deterministic: bool = False, checkpoint=None):
     if quick:
         policies, eps, trials = QUICK_POLICIES, QUICK_EPS, min(trials, 2)
     prior = None
@@ -53,17 +63,25 @@ def run(studies=DEFAULT_STUDIES, policies=DEFAULT_POLICIES,
         prior = StatisticsBank.load(bank)
         print(f"warm-starting from bank {bank} "
               f"({len(prior)} kernel signatures)")
+    artifact = "paper_case_studies" if scale == "paper" \
+        else f"paper_case_studies_{scale}"
+    ck_name = artifact.replace("case_studies", "sweep") + "_checkpoint.json"
     all_rows = []
     for name in studies:
-        ck = os.path.join(ART, "paper_sweep_checkpoint.json")
+        ck = checkpoint or os.path.join(ART, ck_name)
         rows = sweep_study(STUDIES[name], eps=eps, policies=policies,
-                           trials=trials, scale="paper", workers=workers,
-                           checkpoint=ck, prior=prior)
+                           trials=trials, scale=scale, workers=workers,
+                           checkpoint=ck, prior=prior,
+                           prior_discount=discount,
+                           share_stats=share_stats,
+                           deterministic=deterministic)
         all_rows.extend(rows)
-        print(f"\n== {name} (PAPER scale{', quick' if quick else ''}"
-              f"{', warm' if prior else ''}) ==")
+        print(f"\n== {name} ({scale.upper()} scale"
+              f"{', quick' if quick else ''}"
+              f"{', warm' if prior else ''}"
+              f"{', shared' if share_stats else ''}) ==")
         print(fmt_table(rows, COLS))
-    save_rows("paper_case_studies", all_rows)
+    save_rows(artifact, all_rows)
     return all_rows
 
 
@@ -83,10 +101,28 @@ def main():
     ap.add_argument("--bank", default=None,
                     help="StatisticsBank JSON to warm-start the sweep "
                          "from (repro.api.transfer)")
+    ap.add_argument("--discount", type=float, default=0.5,
+                    help="evidence discount applied to --bank (1.0 keeps "
+                         "full evidence: same-machine banks)")
+    ap.add_argument("--scale", default="paper",
+                    choices=["ci", "mid", "paper"],
+                    help="study geometry (mid: SLATE Cholesky on 256 "
+                         "ranks, the beyond-Capital artifact)")
+    ap.add_argument("--share-stats", action="store_true",
+                    help="stream completed points' statistics banks into "
+                         "later points' priors (mid-sweep warm starts)")
+    ap.add_argument("--deterministic", action="store_true",
+                    help="with --share-stats: defer sharing to checkpoint "
+                         "boundaries (scheduling-independent results)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="sweep checkpoint path (default: per-scale file "
+                         "under results/)")
     args = ap.parse_args()
     run(studies=args.studies, policies=args.policies, eps=args.eps,
         trials=args.trials, workers=args.workers, quick=args.quick,
-        bank=args.bank)
+        bank=args.bank, discount=args.discount, scale=args.scale,
+        share_stats=args.share_stats, deterministic=args.deterministic,
+        checkpoint=args.checkpoint)
 
 
 if __name__ == "__main__":

@@ -22,13 +22,16 @@ EPS_FAST = (1.0, 0.25, 0.0625)
 
 
 def sweep_session(make_study, *, trials: int = 3, scale: str = "ci",
-                  prior=None) -> AutotuneSession:
+                  prior=None,
+                  prior_discount: float = 0.5) -> AutotuneSession:
     """Session over a paper study; ``make_study(scale)`` is one of
     ``repro.linalg.studies.STUDIES``.  ``prior`` is a ``StatisticsBank``
-    warm-starting every study of the sweep (repro.api.transfer)."""
+    warm-starting every study of the sweep (repro.api.transfer);
+    ``prior_discount=1.0`` keeps its full evidence (same-machine,
+    same-cost-model banks need no widening)."""
     return AutotuneSession(space_of_study(make_study(scale)),
                            backend=SimBackend(), trials=trials,
-                           prior=prior)
+                           prior=prior, prior_discount=prior_discount)
 
 
 def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
@@ -36,26 +39,33 @@ def sweep_study(make_study, *, policies: Sequence[str] = POLICIES,
                 seeds: Sequence[int] = (0,), allocations=(0,),
                 scale: str = "ci", workers: int = 1,
                 checkpoint: Optional[str] = None,
-                prior=None) -> List[dict]:
+                prior=None, prior_discount: float = 0.5,
+                share_stats: bool = False,
+                deterministic: bool = False,
+                executor=None) -> List[dict]:
     """The paper's measurement protocol (§VI.A): for each policy x epsilon
     (x allocation), run the full exhaustive autotune and record speedup,
     mean prediction error, optimum quality.  ``workers=0`` means one per
-    CPU."""
+    CPU; ``share_stats``/``deterministic``/``executor`` pass through to
+    ``AutotuneSession.sweep`` (mid-sweep statistics sharing; remote
+    workers)."""
     if workers <= 0:
         # floor of 2 so single-core boxes still go through the fork pool
         # (bit-identical to serial) instead of silently degenerating
         workers = max(os.cpu_count() or 1, 2)
     session = sweep_session(make_study, trials=trials, scale=scale,
-                            prior=prior)
+                            prior=prior, prior_discount=prior_discount)
     results = session.sweep(policies=policies, tolerances=eps, seeds=seeds,
                             allocations=allocations, workers=workers,
-                            checkpoint=checkpoint)
+                            checkpoint=checkpoint, share_stats=share_stats,
+                            deterministic=deterministic, executor=executor)
     return [result_row(r) for r in results]
 
 
 def result_row(r: StudyResult) -> dict:
     row = r.row()
     row.update(seed=r.seed, allocation=r.allocation,
+               chosen=r.chosen.name,
                bench_wall_s=round(r.wall_s, 1))
     return row
 

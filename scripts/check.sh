@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Repo gate: tier-1 tests + engine-throughput sanity + session-API smoke +
-# transfer smoke + hypothesis property-suite guard.
+# scheduler (fork + localhost-remote-worker) smoke + transfer smoke +
+# hypothesis property-suite guard.
 #
 # Usage:
 #   bash scripts/check.sh                      # all stages
@@ -8,7 +9,7 @@
 #   bash scripts/check.sh --skip-tests         # legacy: all but tests
 #   bash scripts/check.sh --out results.json   # summary path
 #
-# Stages: tests, engine, session, transfer, hypothesis.
+# Stages: tests, engine, session, scheduler, transfer, hypothesis.
 #
 # Every invocation writes a per-stage JSON summary (exit code, wall
 # seconds, measured throughput ratios where applicable) to
@@ -168,6 +169,80 @@ print(f"OK: session API serial == 2-worker "
 EOF
 }
 
+stage_scheduler() {
+    # the repro.api.scheduler smoke: a deterministic fork-executor sweep
+    # must be bit-identical to the serial driver, and a localhost remote
+    # worker (python -m repro.api.worker over a TCP socket) must produce
+    # the same results as the serial run (the sim backend is
+    # seeded-deterministic across processes).
+    PYTHONPATH="src:tests${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import os
+import re
+import subprocess
+import sys
+
+sys.path.insert(0, "tests")
+from repro.api import AutotuneSession, RemoteExecutor, SimBackend
+from repro.api.scheduler import fork_available
+from golden_runner import golden_space
+
+space = golden_space(1)            # tiny Capital study, world 8
+
+
+def sess():
+    return AutotuneSession(space, backend=SimBackend(), trials=2)
+
+
+def strip(r):
+    d = r.to_json()
+    d.pop("wall_s")
+    return d
+
+
+kw = dict(policies=["conditional", "eager"], tolerances=[0.25])
+serial = [strip(r) for r in sess().sweep(workers=1, **kw)]
+
+if fork_available():
+    det = [strip(r) for r in sess().sweep(
+        workers=2, share_stats=True, deterministic=True, **kw)]
+    if det != serial:
+        print("FAIL: deterministic 2-worker scheduler sweep diverged "
+              "from the serial driver")
+        sys.exit(1)
+    print("fork executor OK: deterministic shared sweep == serial")
+else:
+    print("no os.fork: fork-executor smoke skipped")
+
+worker = subprocess.Popen(
+    [sys.executable, "-m", "repro.api.worker",
+     "--spec", "golden_runner:golden_space",
+     "--spec-args", '{"index": 1}', "--port", "0", "--once"],
+    stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+    env=dict(os.environ))
+try:
+    line = worker.stdout.readline()
+    m = re.match(r"WORKER_READY (\S+) (\d+)", line)
+    if not m:
+        print(f"FAIL: worker did not come up: {line!r}\n"
+              f"{worker.stderr.read()}")
+        sys.exit(1)
+    addr = f"{m.group(1)}:{m.group(2)}"
+    remote = [strip(r) for r in sess().sweep(
+        executor=RemoteExecutor(
+            [addr], expect={"space": space.name,
+                            "n_points": len(space)}), **kw)]
+finally:
+    worker.terminate()
+    worker.wait(timeout=10)
+if remote != serial:
+    print("FAIL: localhost remote-worker sweep diverged from serial")
+    sys.exit(1)
+print(f"remote worker OK: {len(remote)} sweep points over {addr} "
+      f"== serial")
+print(f'RATIO_JSON "scheduler_points": {len(remote)}, "remote_workers": 1')
+EOF
+}
+
 stage_transfer() {
     python - <<'EOF'
 import sys
@@ -228,10 +303,10 @@ stage_hypothesis() {
 }
 
 case "$STAGE" in
-    all)      STAGES=(tests engine session transfer hypothesis) ;;
-    no-tests) STAGES=(engine session transfer hypothesis) ;;
-    tests|engine|session|transfer|hypothesis) STAGES=("$STAGE") ;;
-    *) echo "unknown stage: $STAGE (tests|engine|session|transfer|hypothesis)" >&2
+    all)      STAGES=(tests engine session scheduler transfer hypothesis) ;;
+    no-tests) STAGES=(engine session scheduler transfer hypothesis) ;;
+    tests|engine|session|scheduler|transfer|hypothesis) STAGES=("$STAGE") ;;
+    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|hypothesis)" >&2
        exit 2 ;;
 esac
 

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Nightly regression diff for the recorded paper-sweep artifact.
+
+Compares tonight's ``benchmarks/results/paper_case_studies.json`` (rows
+from ``benchmarks.bench_paper``: one per (study, policy, tolerance, seed,
+allocation) with speedup, prediction quality, optimum quality, and the
+selected configuration) against the previous night's artifact and fails
+on drift beyond tolerance:
+
+- the *selected configuration* must not change at all (the sweep is
+  seeded-deterministic; a different winner means the protocol moved);
+- ``speedup`` may drift by at most ``--tol-speedup`` (relative);
+- ``mean_error`` by at most ``--tol-error`` (absolute);
+- ``optimum_quality`` by at most ``--tol-quality`` (absolute).
+
+Rows are matched on (study, policy, tolerance, seed, allocation); rows
+present on only one side are reported (new grid points are fine, silently
+*lost* ones fail).  Exit codes: 0 clean, 1 drift, 2 usage/IO.  A missing
+previous artifact (first night, expired artifact retention) exits 0 with
+a note — there is nothing to diff against.
+
+Usage::
+
+    python scripts/diff_paper_results.py PREV.json CURR.json \\
+        [--tol-speedup 0.5] [--tol-error 0.05] [--tol-quality 0.05]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+
+def _key(row: dict) -> tuple:
+    return (row.get("study"), row.get("policy"), row.get("tolerance"),
+            row.get("seed", 0), row.get("allocation", 0))
+
+
+def _load(path: str):
+    with open(path) as f:
+        rows = json.load(f)
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: expected a list of sweep rows")
+    return {_key(r): r for r in rows}
+
+
+def _num(v):
+    # rows cross json.dump with NaN allowed; tolerate missing/NaN uniformly
+    return v if isinstance(v, (int, float)) else math.nan
+
+
+def diff(prev: dict, curr: dict, *, tol_speedup: float, tol_error: float,
+         tol_quality: float):
+    """Returns (failures, notes) as lists of human-readable strings."""
+    failures, notes = [], []
+    for key in sorted(set(prev) | set(curr), key=str):
+        name = "/".join(str(k) for k in key)
+        if key not in curr:
+            failures.append(f"{name}: row disappeared from tonight's "
+                            f"artifact")
+            continue
+        if key not in prev:
+            notes.append(f"{name}: new row (no baseline)")
+            continue
+        p, c = prev[key], curr[key]
+        if p.get("chosen") is None or c.get("chosen") is None:
+            # pre-PR-5 artifacts carry no selected-config column; drift
+            # tracking for it starts once both sides record one
+            notes.append(f"{name}: no selected-config baseline")
+        elif p["chosen"] != c["chosen"]:
+            failures.append(
+                f"{name}: selected configuration changed "
+                f"{p['chosen']!r} -> {c['chosen']!r}")
+        ps, cs = _num(p.get("speedup")), _num(c.get("speedup"))
+        if math.isfinite(ps) and math.isfinite(cs) and ps > 0:
+            rel = abs(cs - ps) / ps
+            if rel > tol_speedup:
+                failures.append(
+                    f"{name}: speedup drifted {ps:.3g} -> {cs:.3g} "
+                    f"({rel:.1%} > {tol_speedup:.0%})")
+        for field, tol in (("mean_error", tol_error),
+                           ("optimum_quality", tol_quality)):
+            pv, cv = _num(p.get(field)), _num(c.get(field))
+            if math.isfinite(pv) and math.isfinite(cv) \
+                    and abs(cv - pv) > tol:
+                failures.append(
+                    f"{name}: {field} drifted {pv:.4g} -> {cv:.4g} "
+                    f"(|delta| > {tol})")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous night's paper_case_studies.json")
+    ap.add_argument("curr", help="tonight's paper_case_studies.json")
+    ap.add_argument("--tol-speedup", type=float, default=0.5,
+                    help="max relative speedup drift (default 50%%: the "
+                         "speedup itself is wall-clock-free, but racing/"
+                         "NaN rows and grid growth keep this coarse)")
+    ap.add_argument("--tol-error", type=float, default=0.05,
+                    help="max absolute mean_error drift")
+    ap.add_argument("--tol-quality", type=float, default=0.05,
+                    help="max absolute optimum_quality drift")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.prev):
+        print(f"no previous artifact at {args.prev}: nothing to diff "
+              f"(first night?)")
+        return 0
+    try:
+        prev, curr = _load(args.prev), _load(args.curr)
+    except (OSError, ValueError) as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        return 2
+
+    failures, notes = diff(prev, curr, tol_speedup=args.tol_speedup,
+                           tol_error=args.tol_error,
+                           tol_quality=args.tol_quality)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"FAIL: {len(failures)} regression(s) vs {args.prev}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"OK: {len(curr)} rows within tolerance of {args.prev}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,24 +19,32 @@ Pieces:
 - searches ``"exhaustive"`` and ``"racing"`` (``search``);
 - ``StudyResult`` / ``ConfigRecord``  uniform, JSON-lossless results
   (``result``, ``serialize``);
-- ``AutotuneSession.sweep``  process-parallel, checkpoint/resumable
-  policy x tolerance grids (``session``, ``parallel``).
+- ``AutotuneSession.sweep``  checkpoint/resumable policy x tolerance
+  grids scheduled as explicit-state tasks over pluggable executors —
+  in-process, fork-pool, socket-remote workers — with optional mid-sweep
+  statistics sharing (``session``, ``scheduler``; workers launch via
+  ``python -m repro.api.worker``).
 """
 
 from .backends import (Backend, BackendRun, DryRunBackend, Measurement,
                        SimBackend, WallClockBackend, dryrun_space)
 from .result import ConfigRecord, StudyResult
+from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
+                        RemoteExecutor, Scheduler, SchedulerError, Task,
+                        fork_available)
 from .search import SEARCHES, exhaustive, measure_config, racing
 from .serialize import dumps_canonical, from_jsonable, to_jsonable
-from .session import AutotuneSession
+from .session import AutotuneSession, run_payload
 from .space import RESET_POLICY, ConfigPoint, SearchSpace
 from .transfer import StatisticsBank
 
 __all__ = [
     "AutotuneSession", "Backend", "BackendRun", "ConfigPoint",
-    "ConfigRecord", "DryRunBackend", "Measurement", "RESET_POLICY",
-    "SEARCHES", "SearchSpace", "SimBackend", "StatisticsBank",
-    "StudyResult", "WallClockBackend", "dryrun_space", "dumps_canonical",
-    "exhaustive", "from_jsonable", "measure_config", "racing",
+    "ConfigRecord", "DryRunBackend", "Executor", "ForkExecutor",
+    "InProcessExecutor", "Measurement", "RESET_POLICY", "RemoteExecutor",
+    "SEARCHES", "Scheduler", "SchedulerError", "SearchSpace", "SimBackend",
+    "StatisticsBank", "StudyResult", "Task", "WallClockBackend",
+    "dryrun_space", "dumps_canonical", "exhaustive", "fork_available",
+    "from_jsonable", "measure_config", "racing", "run_payload",
     "to_jsonable",
 ]

@@ -1,130 +1,15 @@
-"""Process-parallel execution of independent sweep points.
+"""Process-parallel execution of independent sweep points — legacy shim.
 
-Sweep points (one (policy, tolerance, seed, allocation) study each) share
-nothing — every point builds its own virtual machine / timer state — so
-they parallelize perfectly, and the sim engine is seeded-deterministic
-per point regardless of which process runs it (the cost model's
-allocation bias is crc32-keyed, not ``hash()``-keyed).  The pool uses
-``os.fork`` rather than ``multiprocessing`` because study spaces carry
-closures (program factories) that do not pickle, and a forked child
-inherits them — plus the parent's warm imports — for free.
-
-Children return results as JSON over a pipe (length-unframed: the child
-writes once and closes; the parent reads to EOF via ``selectors`` so
-pipe-buffer backpressure cannot deadlock the pool), and the parent merges
-them in task order, never completion order, so the merged report is
-deterministic regardless of scheduling.
-
-On platforms without ``fork`` the pool degrades to serial execution.
+.. deprecated::
+    The fork pool moved into ``repro.api.scheduler`` (``ForkExecutor``
+    behind the ``Scheduler`` work queue, which also adds in-process and
+    socket-remote executors plus explicit task state).  ``run_tasks`` and
+    ``fork_available`` are re-exported here unchanged for existing
+    callers; new code should target the scheduler directly.
 """
 
 from __future__ import annotations
 
-import json
-import os
-import selectors
-import sys
-import traceback
-import warnings
-from typing import Any, Callable, Dict, List, Sequence
+from .scheduler import fork_available, run_tasks
 
-
-def fork_available() -> bool:
-    return hasattr(os, "fork")
-
-
-def run_tasks(tasks: Sequence[Any], runner: Callable[[Any], dict], *,
-              workers: int = 1,
-              on_result: Callable[[int, dict], None] = None) -> List[dict]:
-    """Run ``runner(task) -> json-able dict`` over every task, ``workers``
-    at a time, returning results in task order.  ``on_result(index, res)``
-    fires as each result lands (checkpoint hook)."""
-    tasks = list(tasks)
-    if workers <= 1 or len(tasks) <= 1 or not fork_available():
-        out = []
-        for i, t in enumerate(tasks):
-            res = runner(t)
-            if on_result is not None:
-                on_result(i, res)
-            out.append(res)
-        return out
-
-    results: List[Any] = [None] * len(tasks)
-    sel = selectors.DefaultSelector()
-    pending = list(enumerate(tasks))
-    live: Dict[int, dict] = {}          # read-fd -> {index, pid, buf}
-
-    def spawn(index: int, task: Any) -> None:
-        rfd, wfd = os.pipe()
-        # jax warns on any fork once imported anywhere in the process;
-        # backends that actually touch jax declare parallel_safe=False and
-        # never reach this pool, so the warning is noise here
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message=r".*os\.fork\(\).*",
-                category=RuntimeWarning)
-            pid = os.fork()
-        if pid == 0:                     # child
-            os.close(rfd)
-            code = 0
-            try:
-                payload = {"ok": runner(task)}
-            except BaseException:
-                payload = {"err": traceback.format_exc()}
-                code = 1
-            try:
-                with os.fdopen(wfd, "w") as w:
-                    json.dump(payload, w)
-                sys.stdout.flush()
-                sys.stderr.flush()
-            finally:
-                os._exit(code)           # skip parent atexit/finalizers
-        os.close(wfd)
-        os.set_blocking(rfd, False)
-        live[rfd] = {"index": index, "pid": pid, "buf": bytearray()}
-        sel.register(rfd, selectors.EVENT_READ)
-
-    while pending and len(live) < max(workers, 1):
-        spawn(*pending.pop(0))
-
-    try:
-        while live:
-            for key, _ in sel.select():
-                rfd = key.fd
-                st = live[rfd]
-                while True:
-                    try:
-                        chunk = os.read(rfd, 1 << 16)
-                    except BlockingIOError:
-                        break
-                    if not chunk:        # EOF: child wrote and closed
-                        sel.unregister(rfd)
-                        os.close(rfd)
-                        del live[rfd]
-                        os.waitpid(st["pid"], 0)
-                        idx = st["index"]
-                        raw = bytes(st["buf"])
-                        if not raw:
-                            raise RuntimeError(
-                                f"sweep worker for task {idx} died "
-                                "without a result")
-                        payload = json.loads(raw)
-                        if "err" in payload:
-                            raise RuntimeError(
-                                f"sweep worker for task {idx} failed:\n"
-                                f"{payload['err']}")
-                        results[idx] = payload["ok"]
-                        if on_result is not None:
-                            on_result(idx, payload["ok"])
-                        if pending:
-                            spawn(*pending.pop(0))
-                        break
-                    st["buf"] += chunk
-    finally:
-        for st in live.values():
-            try:
-                os.kill(st["pid"], 9)
-                os.waitpid(st["pid"], 0)
-            except OSError:
-                pass
-    return results
+__all__ = ["fork_available", "run_tasks"]

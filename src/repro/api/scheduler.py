@@ -1,0 +1,454 @@
+"""Async work-queue scheduling of sweep tasks over pluggable executors.
+
+The sweep machinery used to be scattered across ``session.sweep`` (grid
+logic + checkpoint), ``parallel.run_tasks`` (a fork pool), and the
+benchmark drivers.  This module lifts it into one subsystem:
+
+- a ``Task`` is one unit of sweep work (one (policy, tolerance, seed,
+  allocation) study) with explicit state — ``pending`` -> ``running`` ->
+  ``done`` | ``failed``;
+- an ``Executor`` is the substrate tasks run on:
+
+  * ``InProcessExecutor`` — synchronous, in this process (the serial
+    driver; the only executor for backends that are not ``parallel_safe``);
+  * ``ForkExecutor``      — ``os.fork`` children, results over pipes
+    (subsumes the old ``repro.api.parallel`` pool: study spaces carry
+    closures that do not pickle, and a forked child inherits them — plus
+    the parent's warm imports — for free);
+  * ``RemoteExecutor``    — socket-connected ``python -m repro.api.worker``
+    processes speaking newline-delimited JSON; each worker owns its own
+    (space, backend) built from an import spec and executes the same task
+    payloads, so a sweep can span machines;
+
+- the ``Scheduler`` drives the queue asynchronously: it keeps the executor
+  saturated up to its capacity, builds each task's payload at *dispatch*
+  time (``prepare`` hook — this is what lets mid-sweep statistics sharing
+  hand later tasks the priors harvested from earlier completions, see
+  ``session.AutotuneSession.sweep(share_stats=True)``), and fires
+  ``on_done`` as results land, in completion order.
+
+Tasks are dispatched in queue order and the caller merges results by task
+index, so the *merged* output is deterministic regardless of completion
+order; whether the measurements themselves are scheduling-independent is
+the caller's contract (cold tasks always are; mid-sweep sharing is not,
+which is why the session offers ``deterministic=True``).
+
+A worker error fails the task and raises ``SchedulerError`` — sweeps are
+resumable from their checkpoint, so failing loudly loses at most the
+in-flight measurements.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import selectors
+import socket
+import sys
+import traceback
+import warnings
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+PENDING = "pending"
+RUNNING = "running"
+DONE = "done"
+FAILED = "failed"
+
+
+class SchedulerError(RuntimeError):
+    """A task failed on its executor (the worker's traceback is in the
+    message; the failed ``Task`` is in ``.task``)."""
+
+    def __init__(self, message: str, task: "Task" = None):
+        super().__init__(message)
+        self.task = task
+
+
+@dataclass
+class Task:
+    """One unit of sweep work, with explicit lifecycle state."""
+
+    index: int                     # position in the submission order
+    spec: Any                      # caller-level description (opaque here)
+    state: str = PENDING
+    payload: Optional[dict] = None  # JSON-able message built at dispatch
+    result: Optional[dict] = None   # the runner's JSON result (state DONE)
+    error: Optional[str] = None     # worker traceback (state FAILED)
+    meta: dict = field(default_factory=dict)
+
+
+def fork_available() -> bool:
+    return hasattr(os, "fork")
+
+
+# ------------------------------------------------------------- executors
+
+class Executor:
+    """Task execution substrate.
+
+    ``start(runner)`` readies the executor (``runner(payload) -> dict`` is
+    the in-process task function; socket executors ignore it and ship the
+    payload instead).  ``submit`` must not block on task completion;
+    ``poll`` blocks until at least one in-flight task finishes and returns
+    ``[(task_index, {"ok": result} | {"err": traceback})]``.  ``capacity``
+    is the number of tasks the executor can hold in flight.
+    """
+
+    capacity: int = 1
+
+    def start(self, runner: Callable[[dict], dict]) -> None:
+        raise NotImplementedError
+
+    def submit(self, index: int, payload: dict) -> None:
+        raise NotImplementedError
+
+    def poll(self) -> List[Tuple[int, dict]]:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class InProcessExecutor(Executor):
+    """Synchronous execution in the calling process — the serial driver.
+
+    ``submit`` runs the task immediately (capacity 1 keeps the scheduler
+    from queueing ahead), so execution order is exactly submission order
+    and shared in-process state (e.g. a study checkpoint journaling
+    per-configuration records) behaves as under the historical serial
+    sweep."""
+
+    capacity = 1
+
+    def __init__(self):
+        self._runner = None
+        self._ready: List[Tuple[int, dict]] = []
+
+    def start(self, runner) -> None:
+        self._runner = runner
+
+    def submit(self, index: int, payload: dict) -> None:
+        try:
+            out = {"ok": self._runner(payload)}
+        except BaseException:
+            out = {"err": traceback.format_exc()}
+        self._ready.append((index, out))
+
+    def poll(self) -> List[Tuple[int, dict]]:
+        out, self._ready = self._ready, []
+        return out
+
+
+class ForkExecutor(Executor):
+    """``os.fork`` children, one per in-flight task, results over pipes.
+
+    Children return results as JSON over a pipe (length-unframed: the
+    child writes once and closes; the parent reads to EOF via
+    ``selectors`` so pipe-buffer backpressure cannot deadlock the pool).
+    """
+
+    def __init__(self, workers: int):
+        if not fork_available():
+            raise RuntimeError("ForkExecutor requires os.fork")
+        self.capacity = max(int(workers), 1)
+        self._runner = None
+        self._sel = None
+        self._live: Dict[int, dict] = {}       # read-fd -> {index, pid, buf}
+
+    def start(self, runner) -> None:
+        self._runner = runner
+        self._sel = selectors.DefaultSelector()
+
+    def submit(self, index: int, payload: dict) -> None:
+        rfd, wfd = os.pipe()
+        # jax warns on any fork once imported anywhere in the process;
+        # backends that actually touch jax declare parallel_safe=False and
+        # never reach this pool, so the warning is noise here
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=r".*os\.fork\(\).*",
+                category=RuntimeWarning)
+            pid = os.fork()
+        if pid == 0:                            # child
+            os.close(rfd)
+            code = 0
+            try:
+                out = {"ok": self._runner(payload)}
+            except BaseException:
+                out = {"err": traceback.format_exc()}
+                code = 1
+            try:
+                with os.fdopen(wfd, "w") as w:
+                    json.dump(out, w)
+                sys.stdout.flush()
+                sys.stderr.flush()
+            finally:
+                os._exit(code)                  # skip parent atexit/finalizers
+        os.close(wfd)
+        os.set_blocking(rfd, False)
+        self._live[rfd] = {"index": index, "pid": pid, "buf": bytearray()}
+        self._sel.register(rfd, selectors.EVENT_READ)
+
+    def poll(self) -> List[Tuple[int, dict]]:
+        results: List[Tuple[int, dict]] = []
+        while not results and self._live:
+            for key, _ in self._sel.select():
+                rfd = key.fd
+                st = self._live[rfd]
+                while True:
+                    try:
+                        chunk = os.read(rfd, 1 << 16)
+                    except BlockingIOError:
+                        break
+                    if not chunk:               # EOF: child wrote and closed
+                        self._sel.unregister(rfd)
+                        os.close(rfd)
+                        del self._live[rfd]
+                        os.waitpid(st["pid"], 0)
+                        raw = bytes(st["buf"])
+                        if not raw:
+                            out = {"err": f"fork worker for task "
+                                          f"{st['index']} died without a "
+                                          f"result"}
+                        else:
+                            out = json.loads(raw)
+                        results.append((st["index"], out))
+                        break
+                    st["buf"] += chunk
+        return results
+
+    def close(self) -> None:
+        for st in self._live.values():
+            try:
+                os.kill(st["pid"], 9)
+                os.waitpid(st["pid"], 0)
+            except OSError:
+                pass
+        self._live.clear()
+
+
+class RemoteExecutor(Executor):
+    """Socket-connected remote workers (``python -m repro.api.worker``).
+
+    ``addresses`` are ``"host:port"`` strings; one task is in flight per
+    worker.  The protocol is newline-delimited JSON:
+
+    - ``{"op": "hello"}`` -> ``{"ok": {"space", "n_points", "backend"}}``
+      (sent at ``start``; when the scheduler supplies ``expect``, the
+      worker's space/backend identity is checked against it so a sweep
+      never lands on a worker tuning a different study);
+    - ``{"op": "run", "id": i, "task": payload}`` -> ``{"id": i,
+      "ok": result}`` or ``{"id": i, "err": traceback}``.
+
+    Workers own their (space, backend) — closures never cross the wire,
+    only task payloads and JSON results, which is what lets a sweep span
+    machines."""
+
+    def __init__(self, addresses: Sequence[str], *,
+                 expect: Optional[dict] = None, timeout: float = 30.0):
+        if not addresses:
+            raise ValueError("RemoteExecutor needs at least one worker "
+                             "address")
+        self.addresses = list(addresses)
+        self.capacity = len(self.addresses)
+        self.expect = expect
+        self.timeout = timeout
+        self._sel = None
+        self._workers: Dict[socket.socket, dict] = {}
+        self._free: List[socket.socket] = []
+
+    @staticmethod
+    def _parse(addr: str) -> Tuple[str, int]:
+        host, _, port = addr.rpartition(":")
+        return host or "127.0.0.1", int(port)
+
+    @staticmethod
+    def _send(sock: socket.socket, msg: dict) -> None:
+        sock.sendall(json.dumps(msg).encode() + b"\n")
+
+    @staticmethod
+    def _recv_line(sock: socket.socket, buf: bytearray) -> dict:
+        """Blocking read of one JSON line (start-time handshake only; task
+        replies go through the selector loop in ``poll``)."""
+        while b"\n" not in buf:
+            chunk = sock.recv(1 << 16)
+            if not chunk:
+                raise SchedulerError("remote worker closed the connection "
+                                     "during handshake")
+            buf += chunk
+        line, _, rest = bytes(buf).partition(b"\n")
+        buf[:] = rest
+        return json.loads(line)
+
+    def start(self, runner) -> None:          # runner unused: work ships out
+        self._sel = selectors.DefaultSelector()
+        for addr in self.addresses:
+            host, port = self._parse(addr)
+            sock = socket.create_connection((host, port),
+                                            timeout=self.timeout)
+            sock.settimeout(self.timeout)
+            buf = bytearray()
+            self._send(sock, {"op": "hello"})
+            hello = self._recv_line(sock, buf)
+            if "err" in hello:
+                raise SchedulerError(
+                    f"worker {addr} refused hello: {hello['err']}")
+            ident = hello.get("ok", {})
+            if self.expect is not None:
+                for k, want in self.expect.items():
+                    got = ident.get(k)
+                    if got != want:
+                        raise SchedulerError(
+                            f"worker {addr} serves {k}={got!r}, this sweep "
+                            f"needs {k}={want!r} — wrong --spec?")
+            sock.setblocking(False)
+            self._workers[sock] = {"addr": addr, "buf": buf, "ident": ident,
+                                   "index": None}
+            self._free.append(sock)
+            self._sel.register(sock, selectors.EVENT_READ)
+
+    def submit(self, index: int, payload: dict) -> None:
+        sock = self._free.pop(0)
+        st = self._workers[sock]
+        st["index"] = index
+        sock.settimeout(self.timeout)       # a wedged worker fails the send
+        self._send(sock, {"op": "run", "id": index, "task": payload})
+        sock.setblocking(False)
+
+    def poll(self) -> List[Tuple[int, dict]]:
+        results: List[Tuple[int, dict]] = []
+        busy = any(st["index"] is not None
+                   for st in self._workers.values())
+        while not results and busy:
+            for key, _ in self._sel.select():
+                sock = key.fileobj
+                st = self._workers.get(sock)
+                if st is None:
+                    continue
+                try:
+                    chunk = sock.recv(1 << 16)
+                except (BlockingIOError, InterruptedError):
+                    continue
+                if not chunk:
+                    idx = st["index"]
+                    self._drop(sock)
+                    if idx is not None:
+                        results.append((idx, {
+                            "err": f"remote worker {st['addr']} died "
+                                   f"mid-task"}))
+                    continue
+                st["buf"] += chunk
+                while b"\n" in st["buf"]:
+                    line, _, rest = bytes(st["buf"]).partition(b"\n")
+                    st["buf"][:] = rest
+                    msg = json.loads(line)
+                    idx = msg.get("id", st["index"])
+                    st["index"] = None
+                    self._free.append(sock)
+                    out = {"ok": msg["ok"]} if "ok" in msg \
+                        else {"err": msg.get("err", "malformed reply")}
+                    results.append((idx, out))
+            busy = any(s["index"] is not None
+                       for s in self._workers.values())
+        return results
+
+    def _drop(self, sock) -> None:
+        self._sel.unregister(sock)
+        self._workers.pop(sock, None)
+        if sock in self._free:
+            self._free.remove(sock)
+        # a dead worker no longer counts toward in-flight capacity; the
+        # scheduler raises rather than stall once no capacity remains
+        self.capacity = len(self._workers)
+        sock.close()
+
+    def close(self) -> None:
+        for sock in list(self._workers):
+            try:
+                sock.close()
+            except OSError:
+                pass
+        self._workers.clear()
+        self._free.clear()
+
+
+# ------------------------------------------------------------- scheduler
+
+class Scheduler:
+    """Drives a task queue over an executor, keeping it saturated.
+
+    ``run(specs, prepare=..., on_done=...)`` turns each spec into a
+    ``Task``, builds its payload at dispatch time via ``prepare(task)``
+    (late binding — this is the mid-sweep statistics-sharing hook), and
+    executes them ``executor.capacity`` at a time.  ``on_done(task)``
+    fires as each task completes, in completion order.  Returns the full
+    task list (submission order) once every task is done; raises
+    ``SchedulerError`` on the first failed task."""
+
+    def __init__(self, executor: Executor,
+                 runner: Optional[Callable[[dict], dict]] = None):
+        self.executor = executor
+        self.runner = runner
+
+    def run(self, specs: Sequence[Any], *,
+            prepare: Optional[Callable[[Task], dict]] = None,
+            on_done: Optional[Callable[[Task], None]] = None) -> List[Task]:
+        tasks = [Task(i, spec) for i, spec in enumerate(specs)]
+        ex = self.executor
+        queue = deque(tasks)
+        inflight: Dict[int, Task] = {}
+        try:
+            ex.start(self.runner)
+            while queue or inflight:
+                while queue and len(inflight) < ex.capacity:
+                    t = queue.popleft()
+                    t.payload = prepare(t) if prepare is not None \
+                        else t.spec
+                    t.state = RUNNING
+                    inflight[t.index] = t
+                    ex.submit(t.index, t.payload)
+                if not inflight:
+                    if queue:
+                        raise SchedulerError(
+                            f"executor has no capacity left with "
+                            f"{len(queue)} tasks still pending (all "
+                            f"workers lost?)")
+                    break
+                for idx, out in ex.poll():
+                    t = inflight.pop(idx)
+                    if "err" in out:
+                        t.state = FAILED
+                        t.error = out["err"]
+                        raise SchedulerError(
+                            f"sweep task {t.index} failed:\n{t.error}",
+                            task=t)
+                    t.state = DONE
+                    t.result = out["ok"]
+                    if on_done is not None:
+                        on_done(t)
+        finally:
+            ex.close()
+        return tasks
+
+
+def run_tasks(tasks: Sequence[Any], runner: Callable[[Any], dict], *,
+              workers: int = 1,
+              on_result: Callable[[int, dict], None] = None) -> List[dict]:
+    """Historical ``repro.api.parallel.run_tasks`` API over the scheduler:
+    run ``runner(task) -> json-able dict`` over every task, ``workers`` at
+    a time, returning results in task order; ``on_result(index, res)``
+    fires as each result lands."""
+    tasks = list(tasks)
+    if workers <= 1 or len(tasks) <= 1 or not fork_available():
+        executor: Executor = InProcessExecutor()
+    else:
+        executor = ForkExecutor(min(workers, len(tasks)))
+
+    def on_done(t: Task) -> None:
+        if on_result is not None:
+            on_result(t.index, t.result)
+
+    done = Scheduler(executor, runner).run(tasks, on_done=on_done)
+    return [t.result for t in done]

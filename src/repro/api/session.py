@@ -19,12 +19,26 @@ One declarative entry point over every tuning path in the repo::
                (CI-driven successive elimination).
 
 ``run`` measures one (policy, tolerance) study.  ``sweep`` runs the
-paper's policy x tolerance measurement grid, optionally process-parallel
-(``workers=N``; fork-based, bit-identical to the serial run, merged in
-deterministic task order) and optionally checkpointed (``checkpoint=
-path``: completed sweep points — and completed configurations inside a
-resumable exhaustive study — are journaled to JSON and skipped on
-re-run, so long paper-scale sweeps survive interruption).
+paper's policy x tolerance measurement grid through the
+``repro.api.scheduler`` work queue: every sweep point is a task with
+explicit state, executed on a pluggable executor — in-process (serial),
+fork-pool (``workers=N``; bit-identical to the serial run, merged in
+grid order), or remote socket workers (``executor=RemoteExecutor([...])``
+over ``python -m repro.api.worker`` processes) — and optionally
+checkpointed (``checkpoint=path``: completed sweep points — and completed
+configurations inside a resumable exhaustive study — are journaled to
+JSON and skipped on re-run, so long paper-scale sweeps survive
+interruption).
+
+``sweep(share_stats=True)`` streams each completed task's statistics bank
+into a shared prior, so sweep points dispatched later warm-start
+mid-sweep (already-confident kernels start in the skip regime; eager
+pre-switches them off machine-wide).  Shared results depend on completion
+order and are journaled under a ``shared_stats`` key; pass
+``deterministic=True`` to defer sharing to checkpoint boundaries instead:
+tasks of one invocation all run from the bank the checkpoint held at
+start (none on the first run — bit-identical to the cold serial driver),
+and the banks they harvest only seed the *next* invocation.
 
 Cross-study transfer (``repro.api.transfer``): ``collect_stats=True``
 attaches the study's per-kernel statistics bank to
@@ -46,19 +60,23 @@ import itertools
 import json
 import os
 import time
-from dataclasses import replace
-from typing import Any, Dict, List, Optional, Sequence, Union
+from dataclasses import asdict, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.policies import Policy, policy as make_policy
 
 from . import search as _search
 from .backends import Backend
-from .parallel import run_tasks
 from .result import StudyResult
+from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
+                        Scheduler, Task, fork_available)
 from .serialize import dumps_canonical
 from .space import SearchSpace
 
 _DRIVERS = {"exhaustive": _search.exhaustive, "racing": _search.racing}
+
+#: sentinel distinguishing "use the session default" from an explicit None
+_UNSET = object()
 
 
 class AutotuneSession:
@@ -71,6 +89,7 @@ class AutotuneSession:
                  seed: int = 0, allocation: int = 0,
                  search_options: Optional[dict] = None,
                  prior=None, prior_discount: float = 0.5,
+                 prior_max_cv: Optional[float] = None,
                  collect_stats: bool = False,
                  **policy_kwargs):
         if search not in _DRIVERS:
@@ -83,11 +102,19 @@ class AutotuneSession:
         self.seed = seed
         self.allocation = allocation
         self.search_options = dict(search_options or {})
-        # cross-study transfer: the discount is applied once, here, so the
-        # checkpoint fingerprint below reflects the evidence actually
-        # seeded; an empty (or None) prior is exactly a cold session
+        # cross-study transfer: the per-key quality filter and the discount
+        # are applied once, here, so the checkpoint fingerprint below
+        # reflects the evidence actually seeded; an empty (or None) prior
+        # is exactly a cold session.  ``prior_max_cv`` drops bank entries
+        # whose dispersion betrays a pooled mixture (byte-bucketed comm
+        # keys pooling several configurations' message sizes) — see
+        # ``StatisticsBank.filtered``.
+        if prior is not None and prior_max_cv is not None:
+            prior = prior.filtered(max_cv=prior_max_cv)
         self.prior = prior.discounted(prior_discount) \
             if prior is not None and len(prior) else None
+        self.prior_discount = prior_discount
+        self.prior_max_cv = prior_max_cv
         self.collect_stats = bool(collect_stats)
         if isinstance(policy, Policy):
             self._base_policy = policy if tolerance is None \
@@ -113,7 +140,12 @@ class AutotuneSession:
 
     # -- one study -----------------------------------------------------------
 
-    def _key(self, pol: Policy, seed: int, allocation: int) -> dict:
+    def _key(self, pol: Policy, seed: int, allocation: int, *,
+             prior=_UNSET, collect=None, shared=False) -> dict:
+        if prior is _UNSET:
+            prior = self.prior
+        if collect is None:
+            collect = self.collect_stats
         key = {"space": self.space.name, "n_points": len(self.space),
                "backend": self.backend.fingerprint(),
                "policy": pol.name,
@@ -122,29 +154,46 @@ class AutotuneSession:
                "allocation": allocation}
         # only non-default transfer settings enter the key, so existing
         # cold checkpoints keep resolving under their original identity
-        if self.prior is not None:
-            key["prior"] = self.prior.fingerprint()
-        if self.collect_stats:
+        if shared:
+            # statistics-sharing sweeps: the prior a task ran under depends
+            # on completion order (live mode) or on which invocation first
+            # dispatched it (deterministic mode), so shared results carry a
+            # mode marker (True | "deterministic") instead of a bank
+            # fingerprint — resumption reuses them, and the key still
+            # prevents replaying them as cold results (or across modes)
+            key["shared_stats"] = shared
+        elif prior is not None:
+            key["prior"] = prior.fingerprint()
+        if collect:
             key["collect_stats"] = True
         return key
 
     def _run_one(self, pol: Policy, seed: int, allocation: int, *,
-                 checkpoint: Optional["_Checkpoint"] = None) -> StudyResult:
+                 checkpoint: Optional["_Checkpoint"] = None,
+                 prior=_UNSET, collect=None, shared=False) -> StudyResult:
+        if prior is _UNSET:
+            prior = self.prior
+        if collect is None:
+            collect = self.collect_stats
         t0 = time.time()
         run = self.backend.open(self.space, pol, seed=seed,
-                                allocation=allocation, prior=self.prior)
+                                allocation=allocation, prior=prior)
         driver = _DRIVERS[self.search]
         opts = dict(self.search_options)
-        key = self._key(pol, seed, allocation)
+        key = self._key(pol, seed, allocation, prior=prior,
+                        collect=collect, shared=shared)
         start = None
-        if checkpoint is not None and self.search == "exhaustive" \
+        if checkpoint is not None and not shared \
+                and self.search == "exhaustive" \
                 and self.space.should_reset(pol):
             # per-configuration journaling is protocol-safe only when
             # statistics reset between configurations: a fresh backend at
             # point k is then in the same state as one that measured
             # points 0..k-1 — up to the backend's carry state (the sim
             # RNG stream), journaled with every record and restored here
-            # (anything else resumes whole studies only)
+            # (anything else resumes whole studies only).  Mid-sweep-shared
+            # tasks never journal partial records: a re-dispatched task may
+            # run under a different evolved prior than the killed one.
             start, carry = checkpoint.partial(key)
             if start:
                 run.restore_carry(carry)
@@ -153,7 +202,7 @@ class AutotuneSession:
                 key, rec, run.carry_state())
         records, extra = driver(run, self.space, pol, trials=self.trials,
                                 **opts)
-        if self.collect_stats and not start:
+        if collect and not start:
             # configurations replayed from a checkpoint journal never fed
             # this run's models, so a resumed study cannot export the full
             # posterior — omit the bank rather than present a partial one
@@ -190,14 +239,45 @@ class AutotuneSession:
 
     # -- policy x tolerance sweeps -------------------------------------------
 
+    def _task_payload(self, spec, prior, *, collect: bool,
+                      shared) -> dict:
+        """The JSON-able task message executors ship (see ``run_payload``:
+        self-describing, so a remote worker reconstructs the exact study
+        from it and its own (space, backend))."""
+        return {"policy": asdict(self._policy(spec[0], spec[1])),
+                "seed": spec[2], "allocation": spec[3],
+                "search": self.search, "trials": self.trials,
+                "search_options": self.search_options,
+                "prior": prior.to_json() if prior is not None else None,
+                "collect": collect, "shared": shared}
+
+    def _select_executor(self, workers: int, n_tasks: int) -> Executor:
+        if workers > 1 and n_tasks > 1 and fork_available() \
+                and getattr(self.backend, "parallel_safe", True):
+            return ForkExecutor(min(workers, n_tasks))
+        # jax/wall-clock backends measure serially regardless of workers
+        return InProcessExecutor()
+
     def sweep(self, *, policies: Optional[Sequence[str]] = None,
               tolerances: Optional[Sequence[float]] = None,
               seeds: Sequence[int] = (0,),
               allocations: Sequence[int] = (0,),
               workers: int = 1,
-              checkpoint: Optional[str] = None) -> List[StudyResult]:
+              checkpoint: Optional[str] = None,
+              executor: Optional[Executor] = None,
+              share_stats: bool = False,
+              deterministic: bool = False) -> List[StudyResult]:
         """The paper's measurement grid (§VI.A): one independent study per
-        (policy, tolerance, seed, allocation), merged in grid order."""
+        (policy, tolerance, seed, allocation), scheduled as tasks on an
+        executor (``workers`` forks; pass ``executor=`` for remote
+        workers) and merged in grid order.
+
+        ``share_stats=True`` streams completed tasks' statistics banks
+        into a shared prior seeding later-dispatched tasks mid-sweep;
+        ``deterministic=True`` defers that sharing to checkpoint
+        boundaries (tasks only warm-start from banks a *previous*
+        invocation persisted to the checkpoint), keeping each invocation
+        bit-identical to the serial driver under the same seed bank."""
         policies = list(policies) if policies is not None \
             else [self._base_policy.name]
         tolerances = list(tolerances) if tolerances is not None \
@@ -205,41 +285,144 @@ class AutotuneSession:
         grid = list(itertools.product(policies, tolerances, seeds,
                                       allocations))
         ck = _Checkpoint(checkpoint) if checkpoint else None
+        shared = _SharedStats(self, ck, frozen=deterministic) \
+            if share_stats else None
+        shared_mode = False if not share_stats \
+            else ("deterministic" if deterministic else True)
+        # mid-sweep sharing needs every task to harvest a bank; the bank is
+        # stripped from results again unless the caller asked for it
+        collect = self.collect_stats or share_stats
 
         results: List[Optional[StudyResult]] = [None] * len(grid)
-        todo = []
+        keys: List[dict] = []
+        todo: List[Tuple[int, tuple]] = []
         for i, spec in enumerate(grid):
             pol = self._policy(spec[0], spec[1])
-            done = ck.result_for(self._key(pol, spec[2], spec[3])) \
-                if ck else None
+            key = self._key(pol, spec[2], spec[3],
+                            collect=collect, shared=shared_mode)
+            keys.append(key)
+            done = ck.result_for(key) if ck else None
             if done is not None:
                 results[i] = done
             else:
                 todo.append((i, spec))
 
-        if not getattr(self.backend, "parallel_safe", True):
-            workers = 1       # jax/wall-clock backends measure serially
+        if executor is None:
+            executor = self._select_executor(workers, len(todo))
+        # serial in-process execution journals inside each study too
+        # (per-config records survive a kill mid-study); forked/remote
+        # workers cannot share the journal file, so those checkpoint whole
+        # points; _run_one additionally refuses partial journaling for
+        # live-shared tasks (the re-dispatch prior may differ)
+        inflight_ck = ck if isinstance(executor, InProcessExecutor) \
+            else None
 
-        # serial execution journals inside each study too (per-config
-        # records survive a kill mid-study); forked children cannot share
-        # the journal file, so parallel sweeps checkpoint whole points
-        inflight_ck = ck if workers <= 1 else None
+        def prepare(task: Task) -> dict:
+            _, spec = task.spec
+            prior = shared.current() if shared else self.prior
+            return self._task_payload(spec, prior, collect=collect,
+                                      shared=shared_mode)
 
-        def runner(spec) -> dict:
-            pol = self._policy(spec[0], spec[1])
-            return self._run_one(pol, spec[2], spec[3],
-                                 checkpoint=inflight_ck).to_json()
+        def runner(payload: dict) -> dict:
+            return run_payload(self.space, self.backend, payload,
+                               checkpoint=inflight_ck,
+                               session=self)
 
-        def land(j: int, res: dict) -> None:
-            i = todo[j][0]
+        def on_done(task: Task) -> None:
+            i, _ = task.spec
+            res = task.result
+            bank_json = res.get("extra", {}).get("kernel_stats")
+            if shared is not None:
+                shared.add(bank_json)
+            if collect and not self.collect_stats and bank_json:
+                res["extra"].pop("kernel_stats", None)
             results[i] = StudyResult.from_json(res)
             if ck:
-                pol = self._policy(*todo[j][1][:2])
-                ck.add_result(self._key(pol, *todo[j][1][2:]), results[i])
+                ck.add_result(keys[i], results[i])
 
-        run_tasks([spec for _, spec in todo], runner, workers=workers,
-                  on_result=land)
+        Scheduler(executor, runner).run(todo, prepare=prepare,
+                                        on_done=on_done)
         return list(results)
+
+
+# ------------------------------------------------------------ task runner
+
+def run_payload(space: SearchSpace, backend: Backend, payload: dict, *,
+                checkpoint: Optional["_Checkpoint"] = None,
+                session: Optional[AutotuneSession] = None) -> dict:
+    """Execute one scheduler task payload (``AutotuneSession._task_payload``
+    shape) against a (space, backend) pair, returning the study-result
+    JSON.  This is the single task-execution entry point shared by the
+    in-process/fork runners (which pass their live ``session``) and the
+    remote worker (which builds a fresh, equivalent session from the
+    payload — it is self-describing: full policy fields, search, trials,
+    prior bank, transfer flags)."""
+    pol = Policy(**payload["policy"])
+    if session is None:
+        session = AutotuneSession(
+            space, backend, policy=pol,
+            search=payload.get("search", "exhaustive"),
+            trials=payload.get("trials", 3),
+            search_options=payload.get("search_options"))
+    prior = None
+    if payload.get("prior"):
+        from .transfer import StatisticsBank
+        bank = StatisticsBank.from_json(payload["prior"])
+        prior = bank if len(bank) else None
+    return session._run_one(
+        pol, payload["seed"], payload["allocation"], checkpoint=checkpoint,
+        prior=prior, collect=payload.get("collect", False),
+        shared=payload.get("shared", False)).to_json()
+
+
+class _SharedStats:
+    """Mid-sweep statistics sharing: the accumulator completed tasks feed
+    and later dispatches seed from.
+
+    ``add`` merges a completed task's harvested bank into the running
+    accumulator and persists it to the checkpoint (``shared_bank`` entry),
+    so a killed sweep resumes with the shared prior rebuilt.  ``current``
+    assembles the dispatch prior: the accumulator — filtered by the
+    session's ``prior_max_cv`` and weakened by its ``prior_discount``,
+    exactly like a static ``prior=`` bank — merged over the session's own
+    static prior.  With ``frozen=True`` (``deterministic`` sweeps) the
+    dispatch prior is pinned to the accumulator state loaded at
+    construction (the checkpoint boundary); completions still accumulate
+    and persist, but only seed the *next* invocation."""
+
+    def __init__(self, session: AutotuneSession,
+                 ck: Optional["_Checkpoint"], *, frozen: bool):
+        from .transfer import StatisticsBank
+        self._session = session
+        self._ck = ck
+        self._frozen = frozen
+        loaded = ck.shared_bank() if ck else None
+        self._acc = loaded if loaded is not None else StatisticsBank()
+        self._seed_prior = self._assemble(self._acc)
+
+    def _assemble(self, bank):
+        s = self._session
+        if not bank:
+            return s.prior
+        if s.prior_max_cv is not None:
+            bank = bank.filtered(max_cv=s.prior_max_cv)
+        bank = bank.discounted(s.prior_discount)
+        if not bank:
+            return s.prior
+        return s.prior.merge(bank) if s.prior is not None else bank
+
+    def current(self):
+        """The prior a task dispatched right now seeds from."""
+        return self._seed_prior if self._frozen else self._assemble(
+            self._acc)
+
+    def add(self, bank_json: Optional[dict]) -> None:
+        if not bank_json:
+            return                  # task harvested nothing (e.g. dry run)
+        from .transfer import StatisticsBank
+        self._acc = self._acc.merge(StatisticsBank.from_json(bank_json))
+        if self._ck is not None:
+            self._ck.set_shared_bank(self._acc)
 
 
 # ----------------------------------------------------------------- journal
@@ -249,7 +432,10 @@ class _Checkpoint:
 
     One file holds a dict keyed by the study key's canonical JSON:
     ``{"results": {key: result_json},
-       "records": {key: {"recs": [record_json], "carry": state}}}``.
+       "records": {key: {"recs": [record_json], "carry": state}},
+       "shared_bank": bank_json}`` — the last entry is the accumulated
+    mid-sweep statistics bank of ``share_stats`` sweeps, so a resumed
+    sweep restores the shared prior its killed predecessor had earned.
     Writes are atomic (tmp + rename) after every landed unit, so a killed
     sweep loses at most the in-flight measurement.
     """
@@ -303,4 +489,16 @@ class _Checkpoint:
             self._k(key), {"recs": [], "carry": None})
         entry["recs"].append(record.to_json())
         entry["carry"] = carry
+        self._flush()
+
+    def shared_bank(self):
+        """The accumulated mid-sweep statistics bank, or ``None``."""
+        got = self._data.get("shared_bank")
+        if not got:
+            return None
+        from .transfer import StatisticsBank
+        return StatisticsBank.from_json(got)
+
+    def set_shared_bank(self, bank) -> None:
+        self._data["shared_bank"] = bank.to_json()
         self._flush()

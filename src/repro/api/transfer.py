@@ -165,6 +165,33 @@ class StatisticsBank:
         return StatisticsBank(
             out, meta=self.meta + [{"discount": factor}])
 
+    def filtered(self, *, max_cv: float,
+                 min_samples: int = 2) -> "StatisticsBank":
+        """Per-key quality filter: drop entries whose coefficient of
+        variation (std / mean) exceeds ``max_cv``.
+
+        Structural keys deliberately coarsen kernel identity — byte
+        bucketing pools nearby message sizes, world-relative geometry pools
+        sub-grids — so a bank recorded across several configurations can
+        hold *mixture* distributions: high-dispersion entries whose wide CI
+        never crosses the predictability threshold, yet whose seeded
+        presence delays the target study's own (much tighter) per-config
+        statistics from doing so (``KernelStats.merge`` pools the prior
+        with the fresh samples).  Dropping them lets those kernels start
+        cold and converge fast, while low-dispersion entries — the ones
+        transfer actually pays off for — seed as usual.  Entries with
+        fewer than ``min_samples`` samples have no defined variance and
+        are dropped too (they carry no skippable confidence).  Applied at
+        ``prior=`` seeding via ``AutotuneSession(prior_max_cv=...)``."""
+        out = {}
+        for k, st in self.entries.items():
+            if st.n < min_samples or st.mean <= 0.0:
+                continue
+            if st.std / st.mean <= max_cv:
+                out[k] = st.copy()
+        return StatisticsBank(
+            out, meta=self.meta + [{"filter_max_cv": max_cv}])
+
     # -- Gaussian-copula-style quantile remap --------------------------------
 
     def remapped(self, target: "StatisticsBank", *,

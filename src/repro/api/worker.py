@@ -1,0 +1,150 @@
+"""Remote sweep worker: ``python -m repro.api.worker``.
+
+Serves scheduler task payloads (see ``repro.api.scheduler.RemoteExecutor``)
+over a TCP socket, executing them against a locally-constructed
+(space, backend) pair — study spaces carry closures that cannot cross a
+wire, so each worker builds its own from an import spec and the scheduler
+ships only JSON task descriptions::
+
+    python -m repro.api.worker \\
+        --spec 'repro.linalg.studies:search_space' \\
+        --spec-args '{"name": "slate-cholesky", "scale": "ci"}' \\
+        --port 0
+
+``--spec`` names ``module:function``; called with the ``--spec-args`` JSON
+object as keyword arguments it must return a ``SearchSpace`` (measured by a
+default ``SimBackend``), a ``(space, backend)`` tuple, or a ``{"space": ...,
+"backend": ...}`` dict.  ``--port 0`` binds an ephemeral port; the worker
+prints one ``WORKER_READY <host> <port>`` line to stdout once listening,
+which launchers (CI smoke, cluster scripts) parse to build the
+``RemoteExecutor`` address list.
+
+Protocol (newline-delimited JSON, one request per line):
+
+- ``{"op": "hello"}``              -> worker identity (space name, point
+                                      count, backend fingerprint) — the
+                                      executor refuses mismatched workers;
+- ``{"op": "run", "id", "task"}``  -> ``{"id", "ok": result_json}`` or
+                                      ``{"id", "err": traceback}``;
+- ``{"op": "shutdown"}``           -> ``{"ok": "bye"}``, then the worker
+                                      exits.
+
+The worker serves connections sequentially (one task in flight per worker
+is the scheduler's contract; run several workers for parallelism) and
+keeps serving after a scheduler disconnects unless ``--once`` is given.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import socket
+import sys
+import traceback
+from typing import Tuple
+
+from .space import SearchSpace
+
+
+def resolve_spec(spec: str, spec_args: dict) -> Tuple[SearchSpace, object]:
+    """Import ``module:function``, call it with ``spec_args``, normalize
+    the result to (space, backend)."""
+    mod_name, _, fn_name = spec.partition(":")
+    if not fn_name:
+        raise ValueError(f"--spec must be 'module:function', got {spec!r}")
+    fn = getattr(importlib.import_module(mod_name), fn_name)
+    got = fn(**spec_args)
+    if isinstance(got, SearchSpace):
+        from .backends import SimBackend
+        return got, SimBackend()
+    if isinstance(got, dict):
+        return got["space"], got["backend"]
+    space, backend = got
+    return space, backend
+
+
+def identity(space: SearchSpace, backend) -> dict:
+    return {"space": space.name, "n_points": len(space),
+            "backend": backend.fingerprint()}
+
+
+def serve(space: SearchSpace, backend, *, host: str = "127.0.0.1",
+          port: int = 0, once: bool = False,
+          ready_out=None) -> None:
+    """Accept scheduler connections and execute task payloads forever
+    (or until a ``shutdown`` request / ``once`` connection closes)."""
+    from .session import run_payload
+
+    srv = socket.create_server((host, port))
+    bound_host, bound_port = srv.getsockname()[:2]
+    out = ready_out or sys.stdout
+    print(f"WORKER_READY {bound_host} {bound_port}", file=out, flush=True)
+
+    def handle(conn) -> bool:
+        """One connection; returns True when asked to shut down."""
+        buf = bytearray()
+        with conn:
+            while True:
+                chunk = conn.recv(1 << 16)
+                if not chunk:
+                    return False
+                buf += chunk
+                while b"\n" in buf:
+                    line, _, rest = bytes(buf).partition(b"\n")
+                    buf[:] = rest
+                    try:
+                        msg = json.loads(line)
+                    except ValueError:
+                        conn.sendall(json.dumps(
+                            {"err": "malformed request"}).encode() + b"\n")
+                        continue
+                    op = msg.get("op")
+                    if op == "hello":
+                        reply = {"ok": identity(space, backend)}
+                    elif op == "shutdown":
+                        conn.sendall(json.dumps(
+                            {"ok": "bye"}).encode() + b"\n")
+                        return True
+                    elif op == "run":
+                        try:
+                            reply = {"id": msg.get("id"),
+                                     "ok": run_payload(space, backend,
+                                                       msg["task"])}
+                        except BaseException:
+                            reply = {"id": msg.get("id"),
+                                     "err": traceback.format_exc()}
+                    else:
+                        reply = {"err": f"unknown op {op!r}"}
+                    conn.sendall(json.dumps(reply).encode() + b"\n")
+
+    with srv:
+        while True:
+            conn, _ = srv.accept()
+            stop = handle(conn)
+            if stop or once:
+                return
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.api.worker",
+        description="remote sweep worker for repro.api.scheduler")
+    ap.add_argument("--spec", required=True,
+                    help="module:function returning the space (or "
+                         "(space, backend)) this worker serves")
+    ap.add_argument("--spec-args", default="{}",
+                    help="JSON object of keyword arguments for --spec")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 binds an ephemeral port (printed on the "
+                         "WORKER_READY line)")
+    ap.add_argument("--once", action="store_true",
+                    help="exit after the first scheduler disconnects")
+    args = ap.parse_args(argv)
+    space, backend = resolve_spec(args.spec, json.loads(args.spec_args))
+    serve(space, backend, host=args.host, port=args.port, once=args.once)
+
+
+if __name__ == "__main__":
+    main()

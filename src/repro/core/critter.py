@@ -42,7 +42,7 @@ import numpy as np
 
 from .channels import ChannelRegistry
 from .models import Extrapolator
-from .pathset import EngineState
+from .pathset import ColdScalars, EngineState
 from .policies import Policy
 from .signatures import Signature
 from .stats import KernelStats
@@ -118,6 +118,9 @@ class Critter:
         # (repro.api.transfer); consumed lazily as signatures are interned
         self._prior_lookup = None
         self._prior_upto = 0
+        # list-backed per-rank scalars, live only inside one forced run
+        # (begin_cold .. finish_cold); see pathset.ColdScalars
+        self._cs: Optional[ColdScalars] = None
 
     # ------------------------------------------------------------------ state
 
@@ -440,28 +443,41 @@ class Critter:
     #
     # ``pred_live`` (eager) IS maintained per statistics write — collective
     # aggregation reads it mid-run.
-    # Everything else — clocks, path profiles, Welford statistics, freq
-    # (read mid-run by Isend snapshots), seen (read by count adoption) —
-    # follows the exact operation order of the scalar methods, so reports,
-    # state, and RNG streams stay bit-identical (tests/test_cold_path.py).
+    # Per-rank scalar timers (clock, path profile, measured accumulators,
+    # counters) live in list-backed mirrors for the duration of the forced
+    # run (``begin_cold`` .. ``finish_cold``; see ``pathset.ColdScalars``):
+    # the p2p-heavy interception hot path touches several of them per event
+    # for two ranks, and Python-list access is several times cheaper than
+    # NumPy scalar indexing while performing the identical IEEE arithmetic.
+    # Everything else — Welford statistics, freq (read mid-run by Isend
+    # snapshots), seen (read by count adoption) — follows the exact
+    # operation order of the scalar methods, so reports, state, and RNG
+    # streams stay bit-identical (tests/test_cold_path.py).
+
+    def begin_cold(self) -> ColdScalars:
+        """Enter list-backed scalar mode for one forced run (the cold
+        interpreter calls this right after growing column capacity)."""
+        self._cs = cs = ColdScalars(self.state)
+        return cs
 
     def on_comp_cold(self, rank: int, sid: int, t: float) -> float:
         """Force-execute charging of one computation kernel with a
         precomputed sample (mirrors the execute branch of ``on_comp``; the
         caller has grown column capacity over every sid of the program)."""
         S = self.state
+        cs = self._cs
         if self.update_stats:
             stats = S.stats(rank, sid)
             stats.update(t)
             if self._eager:
                 self._note_stats(rank, sid, stats)
-        S.clock[rank] += t
-        S.measured_time[rank] += t
-        S.measured_comp[rank] += t
-        S.executed[rank] += 1
-        S.path_exec[rank] += t
-        S.path_comp[rank] += t
-        S.path_kernels[rank] += 1
+        cs.clock[rank] += t
+        cs.measured_time[rank] += t
+        cs.measured_comp[rank] += t
+        cs.executed[rank] += 1
+        cs.path_exec[rank] += t
+        cs.path_comp[rank] += t
+        cs.path_kernels[rank] += 1
         S.freq[rank, sid] += 1
         S.seen[rank, sid] = True
         return t
@@ -477,6 +493,7 @@ class Critter:
         (``KernelStats.update_many``), so every derived quantity is
         bit-identical to the scalar path."""
         S = self.state
+        cs = self._cs
         if self.update_stats:
             eager = self._eager
             uniq = block.uniq.tolist()
@@ -489,11 +506,11 @@ class Critter:
                     stats.update_many([ts[i] for i in idx])
                 if eager:
                     self._note_stats(rank, sid, stats)
-        c = float(S.clock[rank])
-        mt = float(S.measured_time[rank])
-        mc = float(S.measured_comp[rank])
-        pe = float(S.path_exec[rank])
-        pc = float(S.path_comp[rank])
+        c = cs.clock[rank]
+        mt = cs.measured_time[rank]
+        mc = cs.measured_comp[rank]
+        pe = cs.path_exec[rank]
+        pc = cs.path_comp[rank]
         total = 0.0
         for t in ts:
             c += t
@@ -502,46 +519,121 @@ class Critter:
             pe += t
             pc += t
             total += t
-        S.clock[rank] = c
-        S.measured_time[rank] = mt
-        S.measured_comp[rank] = mc
-        S.path_exec[rank] = pe
-        S.path_comp[rank] = pc
-        S.executed[rank] += block.n
-        S.path_kernels[rank] += block.n
+        cs.clock[rank] = c
+        cs.measured_time[rank] = mt
+        cs.measured_comp[rank] = mc
+        cs.path_exec[rank] = pe
+        cs.path_comp[rank] = pc
+        cs.executed[rank] += block.n
+        cs.path_kernels[rank] += block.n
         S.freq[rank, block.uniq] += block.counts
         S.seen[rank, block.uniq] = True
         return total
+
+    def on_coll_cold(self, sid: int, comm, t: float,
+                     overhead: float = 0.0) -> float:
+        """Force-execute completion of a blocking collective with a
+        precomputed sample (mirrors the force branch of ``on_coll``:
+        winner adoption, clock sync, per-participant statistics update,
+        eager aggregation — with the per-rank scalars on the list mirrors
+        and the ``iter_exec``/``mean_arr`` writes deferred to
+        ``finish_cold`` like every other cold interception)."""
+        S = self.state
+        cs = self._cs
+        ranks = comm.ranks
+        ridx = comm.ranks_np
+        pe = cs.path_exec
+        clock = cs.clock
+        # first-max winner / clock max, matching take().argmax()/max()
+        winner = ranks[0]
+        best = pe[winner]
+        max_clock = clock[winner]
+        for r in ranks[1:]:
+            v = pe[r]
+            if v > best:
+                best = v
+                winner = r
+            c = clock[r]
+            if c > max_clock:
+                max_clock = c
+        if self._propagates:
+            wseen = S.seen[winner]
+            S.freq[ridx] = np.where(wseen, S.freq[winner], S.freq[ridx])
+            S.seen[ridx] |= wseen
+        pc = cs.path_comp
+        pm = cs.path_comm
+        pk = cs.path_kernels
+        pew = pe[winner]
+        pcw = pc[winner]
+        pmw = pm[winner]
+        pkw = pk[winner]
+
+        max_clock += overhead  # internal-allreduce profiling cost
+        new_clock = max_clock + t
+        update = self.update_stats
+        eager = self._eager
+        mt = cs.measured_time
+        ex = cs.executed
+        for r in ranks:
+            if update:
+                stats = S.stats(r, sid)
+                stats.update(t)
+                if eager:
+                    self._note_stats(r, sid, stats)
+            clock[r] = new_clock
+            mt[r] += t
+            ex[r] += 1
+            pe[r] = pew + t
+            pc[r] = pcw
+            pm[r] = pmw + t
+            pk[r] = pkw + 1
+        S.freq[ridx, sid] += 1
+        S.seen[ridx, sid] = True
+        if eager and comm.channel is not None:
+            self._aggregate_statistics(comm)
+        return new_clock
 
     def on_p2p_cold(self, src: int, dst: int, sid: int, t: float,
                     overhead: float = 0.0) -> float:
         """Force-execute completion of a blocking Send/Recv pair with a
         precomputed sample (mirrors the execute branch of ``on_p2p``)."""
         S = self.state
-        pe = S.path_exec
+        cs = self._cs
+        pe = cs.path_exec
         winner, loser = (src, dst) if pe[src] > pe[dst] else (dst, src)
         if self._propagates:
             wseen = S.seen[winner]
             np.copyto(S.freq[loser], S.freq[winner], where=wseen)
             S.seen[loser] |= wseen
         pe[loser] = pe[winner]
-        S.path_comp[loser] = S.path_comp[winner]
-        S.path_comm[loser] = S.path_comm[winner]
-        S.path_kernels[loser] = S.path_kernels[winner]
+        pc = cs.path_comp
+        pm = cs.path_comm
+        pk = cs.path_kernels
+        pc[loser] = pc[winner]
+        pm[loser] = pm[winner]
+        pk[loser] = pk[winner]
 
-        clock = S.clock
-        done = max(clock[src], clock[dst]) + overhead + t
+        clock = cs.clock
+        a = clock[src]
+        b = clock[dst]
+        done = (a if a > b else b) + overhead + t
         update = self.update_stats
         eager = self._eager
+        mt = cs.measured_time
+        ex = cs.executed
         for r in (src, dst):
             if update:
                 stats = S.stats(r, sid)
                 stats.update(t)
                 if eager:
                     self._note_stats(r, sid, stats)
-            S.measured_time[r] += t
-            S.executed[r] += 1
-            self._charge_comm(r, sid, t)
+            mt[r] += t
+            ex[r] += 1
+            pe[r] += t
+            pm[r] += t
+            pk[r] += 1
+            S.freq[r, sid] += 1
+            S.seen[r, sid] = True
         clock[src] = done
         clock[dst] = done
         return done
@@ -553,20 +645,22 @@ class Critter:
         ``on_isend_match``; the sender-local vote is constant-True under
         force, so the interpreter's post slots carry only the snapshot)."""
         S = self.state
+        cs = self._cs
         (p_exec, p_comp, p_comm, p_kc), post_freqs, post_clock = snapshot
 
-        if p_exec > S.path_exec[dst]:
+        if p_exec > cs.path_exec[dst]:
             if self._propagates and post_freqs is not None:
                 m = post_freqs.shape[0]
                 mask = post_freqs > 0
                 np.copyto(S.freq[dst, :m], post_freqs, where=mask)
                 S.seen[dst, :m] |= mask
-            S.path_exec[dst] = p_exec
-            S.path_comp[dst] = p_comp
-            S.path_comm[dst] = p_comm
-            S.path_kernels[dst] = p_kc
+            cs.path_exec[dst] = p_exec
+            cs.path_comp[dst] = p_comp
+            cs.path_comm[dst] = p_comm
+            cs.path_kernels[dst] = p_kc
 
-        done = max(post_clock, S.clock[dst]) + overhead + t
+        cd = cs.clock[dst]
+        done = (post_clock if post_clock > cd else cd) + overhead + t
         if self.update_stats:
             eager = self._eager
             for r in (src, dst):
@@ -574,20 +668,38 @@ class Critter:
                 stats.update(t)
                 if eager:
                     self._note_stats(r, sid, stats)
-        S.executed[src] += 1
-        S.executed[dst] += 1
-        S.measured_time[dst] += t
-        self._charge_comm(dst, sid, t)
-        S.clock[dst] = done
+        cs.executed[src] += 1
+        cs.executed[dst] += 1
+        cs.measured_time[dst] += t
+        cs.path_exec[dst] += t
+        cs.path_comm[dst] += t
+        cs.path_kernels[dst] += 1
+        S.freq[dst, sid] += 1
+        S.seen[dst, sid] = True
+        cs.clock[dst] = done
         return done
 
-    def finish_cold(self, rows, cols) -> None:
-        """End-of-forced-run bulk pass: set ``iter_exec`` over the run's
-        statically-known (rank, sid) execution pairs and mirror the final
-        K-bar means into ``mean_arr`` (deferred from the per-event cold
-        interceptions above; collective interceptions used the scalar
-        methods and are already mirrored)."""
+    def isend_snapshot_cold(self, rank: int):
+        """``isend_snapshot`` against the list mirrors (the values are
+        already Python scalars)."""
         S = self.state
+        cs = self._cs
+        freqs = S.freq[rank].copy() if self._propagates else None
+        path = (cs.path_exec[rank], cs.path_comp[rank],
+                cs.path_comm[rank], cs.path_kernels[rank])
+        return (path, freqs, cs.clock[rank])
+
+    def finish_cold(self, rows, cols) -> None:
+        """End-of-forced-run bulk pass: write the list-backed per-rank
+        scalars back to the arrays, set ``iter_exec`` over the run's
+        statically-known (rank, sid) execution pairs and mirror the final
+        K-bar means into ``mean_arr`` (both deferred from the per-event
+        cold interceptions above)."""
+        S = self.state
+        cs = self._cs
+        if cs is not None:
+            cs.writeback(S)
+            self._cs = None
         S.iter_exec[rows, cols] = True
         if self.update_stats:
             kbar = S.kbar

@@ -169,3 +169,46 @@ class EngineState:
         if st is None:
             st = d[sid] = KernelStats()
         return st
+
+
+class ColdScalars:
+    """List-backed mirrors of the per-rank scalar timers for the duration
+    of one forced (cold) run.
+
+    The cold interpreter's interceptions are dominated by scalar reads and
+    read-modify-writes of the per-rank accumulators (clock, path profile,
+    measured time, counters) — on the p2p-heavy programs two ranks per
+    event, several fields each.  NumPy scalar indexing pays boxing/unboxing
+    per access; plain Python lists of floats/ints are several times
+    cheaper, and the arithmetic (IEEE double adds, int increments, max of
+    two floats) is value-identical.  ``Critter.begin_cold`` snapshots the
+    arrays into lists, the ``*_cold`` interceptions operate on them, and
+    ``finish_cold`` writes them back — nothing else reads the per-rank
+    scalars mid-forced-run (the selective vote and skip-prediction paths
+    never run under force).  ``skipped`` is untouched by forced runs and
+    stays on the array.
+    """
+
+    __slots__ = ("clock", "path_exec", "path_comp", "path_comm",
+                 "path_kernels", "measured_time", "measured_comp",
+                 "executed")
+
+    def __init__(self, S: EngineState):
+        self.clock = S.clock.tolist()
+        self.path_exec = S.path_exec.tolist()
+        self.path_comp = S.path_comp.tolist()
+        self.path_comm = S.path_comm.tolist()
+        self.path_kernels = S.path_kernels.tolist()
+        self.measured_time = S.measured_time.tolist()
+        self.measured_comp = S.measured_comp.tolist()
+        self.executed = S.executed.tolist()
+
+    def writeback(self, S: EngineState) -> None:
+        S.clock[:] = self.clock
+        S.path_exec[:] = self.path_exec
+        S.path_comp[:] = self.path_comp
+        S.path_comm[:] = self.path_comm
+        S.path_kernels[:] = self.path_kernels
+        S.measured_time[:] = self.measured_time
+        S.measured_comp[:] = self.measured_comp
+        S.executed[:] = self.executed

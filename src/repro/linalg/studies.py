@@ -48,6 +48,12 @@ def capital_cholesky_study(scale: str = "ci") -> Study:
 def slate_cholesky_study(scale: str = "ci") -> Study:
     if scale == "paper":
         p, pr, pc, n, t0, dt = 1024, 32, 32, 65536, 256, 64
+    elif scale == "mid":
+        # beyond-Capital paper-scale stepping stone: the §V.C configuration
+        # structure on 256 real ranks (the SLATE QR paper geometry) with
+        # the matrix scaled so a sweep stays hours-not-days on this
+        # container — the artifact recorded by ``bench_paper --scale mid``
+        p, pr, pc, n, t0, dt = 256, 16, 16, 16384, 256, 64
     else:
         p, pr, pc, n, t0, dt = 64, 8, 8, 8192, 256, 64
     configs: List[Configuration] = []

@@ -169,12 +169,12 @@ class _ColdProgram:
     order as the interleaved seed engine.
 
     steps -- (CS_COMP, rank, sid, sig) | (CS_BLOCK, rank, block, sigs)
-             | (CS_IPOST, rank, slot) | (CS_COLL, sid, comm)
+             | (CS_IPOST, rank, slot) | (CS_COLL, sid, comm, sig)
              | (CS_P2P, src, dst, sid, sig)
              | (CS_IMATCH, src, dst, sid, slot, sig)
     exec_rows/exec_cols -- the statically-known (rank, sid) pairs executed
-             by non-collective steps, for Critter.finish_cold's deferred
-             iter_exec/mean_arr bulk pass
+             by every sampling step (collectives included), for
+             Critter.finish_cold's deferred iter_exec/mean_arr bulk pass
     batch -- lazy cost-model batch support: None until probed, False when
              the timer cannot batch, else (det, sigma) draw-order arrays
     """
@@ -488,8 +488,9 @@ class Runtime:
                 steps.append((CS_IPOST, ev[1], ev[3]))
             elif k == EV_COLL:
                 sid = ev[1]
-                steps.append((CS_COLL, sid, ev[2]))
+                steps.append((CS_COLL, sid, ev[2], sigs[sid]))
                 draw_sigs.append(sigs[sid])
+                exec_pairs.update((r, sid) for r in ev[2].ranks)
             elif k == EV_P2P:
                 sid = ev[3]
                 steps.append((CS_P2P, ev[1], ev[2], sid, sigs[sid]))
@@ -542,7 +543,7 @@ class Runtime:
             else:
                 on_coll(ev[1], ev[2], sampler, overhead)
 
-    def _run_events_cold(self, cold: _ColdProgram, sampler) -> None:
+    def _run_events_cold(self, cold: _ColdProgram) -> None:
         """Execute a cold program under force_execute.
 
         When the cost model batches, every sample of the run — computation
@@ -550,20 +551,24 @@ class Runtime:
         each step consumes its precomputed time at a running cursor;
         otherwise each sampling step draws through the scalar timer at its
         own position, which is the same call sequence as the interleaved
-        seed engine.  Communication interceptions reuse the scalar Critter
-        methods (a one-shot closure injects the predrawn sample), so the
-        protocol code has a single implementation."""
+        seed engine.  All interceptions go through the force-specialized
+        ``*_cold`` Critter methods, which operate on list-backed per-rank
+        scalar mirrors for the duration of the run (``begin_cold`` ..
+        ``finish_cold``) — NumPy scalar indexing dominates the p2p-heavy
+        hot path otherwise, particularly under the scalar-fallback draws
+        of straggler-enabled cost models."""
         critter = self.critter
         critter.state.ensure(cold.max_sid)
+        critter.begin_cold()
         rng = self._rng
         timer = self.timer
         overhead = self.overhead
         on_comp_cold = critter.on_comp_cold
         on_comp_block_cold = critter.on_comp_block_cold
-        on_coll = critter.on_coll
+        on_coll_cold = critter.on_coll_cold
         on_p2p_cold = critter.on_p2p_cold
         on_isend_match_cold = critter.on_isend_match_cold
-        isend_snapshot = critter.isend_snapshot
+        isend_snapshot_cold = critter.isend_snapshot_cold
         slots: List[Optional[tuple]] = [None] * cold.n_slots
 
         info = cold.batch
@@ -592,7 +597,7 @@ class Runtime:
                     cur += 1
                 on_comp_cold(st[1], st[2], t)
             elif k == CS_IPOST:
-                slots[st[2]] = isend_snapshot(st[1])
+                slots[st[2]] = isend_snapshot_cold(st[1])
             elif k == CS_IMATCH:
                 if ts is None:
                     t = timer(st[5], rng)
@@ -619,11 +624,11 @@ class Runtime:
                 on_p2p_cold(st[1], st[2], st[3], t, overhead)
             else:
                 if ts is None:
-                    smp = sampler
+                    t = timer(st[3], rng)
                 else:
-                    smp = lambda sig, _t=ts[cur]: _t  # noqa: E731
+                    t = ts[cur]
                     cur += 1
-                on_coll(st[1], st[2], smp, overhead)
+                on_coll_cold(st[1], st[2], t, overhead)
         critter.finish_cold(cold.exec_rows, cold.exec_cols)
 
     # -- main loop ------------------------------------------------------------
@@ -655,7 +660,7 @@ class Runtime:
             cold = prog.cold
             if cold is None:
                 cold = prog.cold = self._build_cold(prog)
-            self._run_events_cold(cold, sampler)
+            self._run_events_cold(cold)
         else:
             self._run_events(prog, sampler)
         return RunResult.from_report(critter.report())

@@ -258,6 +258,39 @@ class LMStudy:
                 bank = bank.merge(b)
         return bank
 
+    def session(self, *, policy: str = "conditional",
+                tolerance: float = 0.25, search: str = "exhaustive",
+                max_configs: Optional[int] = None, trials: int = 3,
+                prior=None, **kw):
+        """The supported front-end over this study: an ``AutotuneSession``
+        measuring StepKnobs points with ``WallClockBackend`` bound to
+        ``kernels_of``.  Sweeps run through ``repro.api.scheduler`` like
+        every other study (serially — wall-clock backends are not
+        ``parallel_safe``); ``search="racing"`` races configurations by
+        real wall clock (see ``race``)."""
+        from repro.api import AutotuneSession, WallClockBackend
+        return AutotuneSession(self.search_space(max_configs),
+                               backend=WallClockBackend(self.kernels_of),
+                               policy=policy, tolerance=tolerance,
+                               search=search, trials=trials, prior=prior,
+                               **kw)
+
+    def race(self, *, policy: str = "conditional", tolerance: float = 0.25,
+             max_configs: Optional[int] = None, max_rounds: int = 6,
+             prior=None, **kw):
+        """Wall-clock racing study: successive elimination over the
+        StepKnobs space driven by the paper's per-kernel CIs on real
+        measured step times — each round gives every surviving
+        configuration one selective trial and prunes configurations whose
+        CI lower bound exceeds the incumbent's upper bound.  Returns the
+        ``StudyResult`` (winner in ``extra["best"]``); far cheaper than
+        the exhaustive protocol when only the optimum is wanted, because
+        losing configurations stop being timed at all."""
+        return self.session(policy=policy, tolerance=tolerance,
+                            search="racing", max_configs=max_configs,
+                            search_options={"max_rounds": max_rounds},
+                            prior=prior, **kw).run()
+
     def search_space(self, max_configs: Optional[int] = None):
         """The session-API view of this study's StepKnobs space.  Resets
         follow the policy (eager's persistent models skip the reset), the

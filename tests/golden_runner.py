@@ -64,6 +64,16 @@ def _studies():
     return (slate, capital, candmc)
 
 
+def golden_space(index: int = 1):
+    """Session-API space of one tiny golden study — also the remote-worker
+    spec used by the scheduler smoke tests and ``check.sh --stage
+    scheduler``: ``python -m repro.api.worker --spec
+    golden_runner:golden_space --spec-args '{"index": 1}'`` (with tests/
+    on PYTHONPATH)."""
+    from repro.core.tuner import space_of_study
+    return space_of_study(_studies()[index])
+
+
 def compute_goldens() -> dict:
     out = {}
     for study in _studies():

@@ -1,0 +1,366 @@
+"""repro.api.scheduler contract tests.
+
+- executor equivalence: serial (in-process), fork-pool, and localhost
+  remote-worker sweeps produce identical results (same study, same
+  winner, bit-identical records);
+- deterministic sharing: a ``share_stats=True, deterministic=True`` fork
+  sweep is bit-identical to the serial PR-2 golden sweep (and to the
+  golden reports themselves);
+- mid-sweep sharing: later-dispatched sweep points warm-start from
+  earlier completions' banks (strictly fewer executed kernels, same
+  winner) and the shared prior survives kill-and-resume through the
+  checkpoint;
+- the scheduler drives racing sweeps end-to-end;
+- task lifecycle: explicit pending/running/done/failed states, failure
+  propagation as ``SchedulerError``.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import (AutotuneSession, RemoteExecutor, Scheduler,
+                       SchedulerError, SimBackend, StatisticsBank)
+from repro.api.scheduler import (DONE, FAILED, ForkExecutor,
+                                 InProcessExecutor, fork_available)
+from repro.core.policies import POLICIES
+from repro.core.tuner import space_of_study
+from repro.simmpi.costmodel import CostModel, KNL_STAMPEDE2
+
+from golden_runner import GOLDEN_PATH, _studies, golden_space
+
+GOLDEN_FIELDS = ("full_time", "predicted", "rel_error", "comp_error",
+                 "selective_cost", "full_cost", "executed", "skipped",
+                 "predictions")
+
+
+def _golden_backend():
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0, bias_sigma=0.0)
+    return SimBackend(timer=cm.sample)
+
+
+def _capital_session(backend=None, **kw):
+    return AutotuneSession(space_of_study(_studies()[1]),
+                           backend=backend or _golden_backend(),
+                           trials=2, **kw)
+
+
+def _strip(result) -> dict:
+    d = result.to_json()
+    d.pop("wall_s", None)
+    return d
+
+
+# -- scheduler core ------------------------------------------------------------
+
+def test_task_lifecycle_and_order():
+    seen = []
+    done_order = []
+
+    def runner(payload):
+        seen.append(payload)
+        return {"value": payload * 10}
+
+    tasks = Scheduler(InProcessExecutor(), runner).run(
+        [3, 1, 2], on_done=lambda t: done_order.append(t.index))
+    assert [t.state for t in tasks] == [DONE] * 3
+    assert [t.result for t in tasks] == [{"value": 30}, {"value": 10},
+                                         {"value": 20}]
+    assert seen == [3, 1, 2]            # submission order == spec order
+    assert done_order == [0, 1, 2]      # serial: completion == submission
+
+
+def test_prepare_hook_late_binds_payloads():
+    """Payloads are built at dispatch time, after earlier completions —
+    the property mid-sweep statistics sharing rests on."""
+    finished = []
+
+    def prepare(task):
+        return {"spec": task.spec, "seen": list(finished)}
+
+    def runner(payload):
+        finished.append(payload["spec"])
+        return payload
+
+    tasks = Scheduler(InProcessExecutor(), runner).run(
+        ["a", "b", "c"], prepare=prepare)
+    assert tasks[0].result["seen"] == []
+    assert tasks[1].result["seen"] == ["a"]
+    assert tasks[2].result["seen"] == ["a", "b"]
+
+
+def test_failed_task_raises_with_state():
+    def runner(payload):
+        if payload == 1:
+            raise ValueError("boom")
+        return {"ok": payload}
+
+    sched = Scheduler(InProcessExecutor(), runner)
+    with pytest.raises(SchedulerError, match="boom") as ei:
+        sched.run([0, 1, 2])
+    assert ei.value.task.state == FAILED
+    assert ei.value.task.index == 1
+    assert "ValueError" in ei.value.task.error
+
+
+@pytest.mark.skipif(not fork_available(), reason="no os.fork")
+def test_fork_executor_matches_in_process():
+    def runner(payload):
+        return {"square": payload * payload}
+
+    serial = Scheduler(InProcessExecutor(), runner).run(list(range(5)))
+    forked = Scheduler(ForkExecutor(2), runner).run(list(range(5)))
+    assert [t.result for t in serial] == [t.result for t in forked]
+    assert all(t.state == DONE for t in forked)
+
+
+def test_scheduler_raises_when_capacity_exhausted():
+    """Losing every worker mid-sweep (RemoteExecutor shrinks capacity as
+    workers drop) must raise, not return with tasks silently pending."""
+    from repro.api.scheduler import Executor
+
+    class _DyingExecutor(Executor):
+        capacity = 1
+
+        def start(self, runner):
+            self._runner = runner
+
+        def submit(self, index, payload):
+            self._pending = (index, {"ok": self._runner(payload)})
+
+        def poll(self):
+            out = [self._pending]
+            self.capacity = 0            # the only worker died while idle
+            return out
+
+    with pytest.raises(SchedulerError, match="no capacity"):
+        Scheduler(_DyingExecutor(), lambda p: {"v": p}).run([1, 2, 3])
+
+
+# -- executor equivalence on real sweeps ---------------------------------------
+
+def test_serial_vs_fork_vs_remote_same_results(tmp_path):
+    """The acceptance smoke: the same sweep through all three executors
+    lands on identical results (the sim backend is seeded-deterministic
+    across processes and machines)."""
+    assert fork_available(), "fork executor cannot be exercised here"
+    space = golden_space(1)
+
+    def sess():
+        # default SimBackend: the remote worker builds the same one
+        return AutotuneSession(space, backend=SimBackend(), trials=2)
+
+    kw = dict(policies=["conditional", "eager"], tolerances=[0.25])
+    serial = [_strip(r) for r in sess().sweep(workers=1, **kw)]
+    forked = [_strip(r) for r in sess().sweep(workers=2, **kw)]
+    assert forked == serial
+
+    with _worker(1) as addr:
+        ex = RemoteExecutor([addr], expect={"space": space.name,
+                                            "n_points": len(space)})
+        remote = [_strip(r) for r in sess().sweep(executor=ex, **kw)]
+    assert remote == serial
+    winners = {json.dumps(r["records"], sort_keys=True) for r in serial}
+    assert len(winners) <= len(serial)   # sanity: records present
+    for r in serial:
+        assert len(r["records"]) == len(space)
+
+
+class _worker:
+    """Launch ``python -m repro.api.worker`` serving the tiny golden
+    Capital space on an ephemeral localhost port."""
+
+    def __init__(self, index: int):
+        self.index = index
+        self.proc = None
+
+    def __enter__(self) -> str:
+        here = os.path.dirname(__file__)
+        src = os.path.abspath(os.path.join(here, os.pardir, "src"))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.api.worker",
+             "--spec", "golden_runner:golden_space",
+             "--spec-args", json.dumps({"index": self.index}),
+             "--port", "0", "--once"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env)
+        line = self.proc.stdout.readline()
+        m = re.match(r"WORKER_READY (\S+) (\d+)", line)
+        assert m, (f"worker failed to start: {line!r}\n"
+                   f"{self.proc.stderr.read()}")
+        return f"{m.group(1)}:{m.group(2)}"
+
+    def __exit__(self, *exc):
+        self.proc.terminate()
+        self.proc.wait(timeout=30)
+
+
+def test_remote_worker_rejects_wrong_spec():
+    with _worker(0) as addr:                    # serves golden-slate
+        ex = RemoteExecutor([addr], expect={"space": "golden-capital"})
+        with pytest.raises(SchedulerError, match="golden-slate"):
+            ex.start(None)
+
+
+def test_remote_worker_task_error_propagates():
+    space = golden_space(1)
+    with _worker(1) as addr:
+        session = AutotuneSession(space, backend=SimBackend(),
+                                  search="racing", trials=1,
+                                  search_options={"max_rounds": 0,
+                                                  "bogus_option": True})
+        with pytest.raises(SchedulerError, match="bogus_option"):
+            session.sweep(executor=RemoteExecutor([addr]),
+                          policies=["online"], tolerances=[0.25])
+
+
+# -- deterministic sharing: golden parity --------------------------------------
+
+@pytest.mark.skipif(not fork_available(), reason="no os.fork")
+def test_deterministic_fork_share_sweep_matches_golden():
+    """share_stats=True, deterministic=True with no checkpoint bank defers
+    all sharing: a 2-worker fork sweep must be bit-identical to the serial
+    driver AND to the PR-2 golden records."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    study = _studies()[1]
+    kw = dict(policies=list(POLICIES), tolerances=[0.25])
+    serial = _capital_session().sweep(workers=1, **kw)
+    det = _capital_session().sweep(workers=2, share_stats=True,
+                                   deterministic=True, **kw)
+    assert [_strip(r) for r in det] == [_strip(r) for r in serial]
+    for res in det:
+        g_recs = golden[study.name][res.policy]
+        got = json.loads(json.dumps([r.to_json() for r in res.records]))
+        assert len(got) == len(g_recs)
+        for g, n in zip(g_recs, got):
+            assert n["name"] == g["name"]
+            for field in GOLDEN_FIELDS:
+                assert n[field] == g[field], \
+                    f"{res.policy}/{g['name']}/{field}"
+
+
+# -- mid-sweep statistics sharing ----------------------------------------------
+
+def test_live_sharing_warm_starts_later_points():
+    kw = dict(policies=["eager"], tolerances=[1.0, 0.25, 0.0625])
+    cold = _capital_session().sweep(workers=1, **kw)
+    live = _capital_session().sweep(workers=1, share_stats=True, **kw)
+    cold_exec = [sum(r.executed for r in res.records) for res in cold]
+    live_exec = [sum(r.executed for r in res.records) for res in live]
+    # the first point dispatches with no completions: identical to cold
+    assert _strip(live[0]) == _strip(cold[0])
+    # later points ride the shared prior: strictly fewer executions,
+    # same winners
+    assert sum(live_exec[1:]) < sum(cold_exec[1:])
+    for c, l in zip(cold, live):
+        assert l.chosen.name == c.chosen.name
+    # sharing is scheduling-state, not result payload: no bank attached
+    assert all("kernel_stats" not in res.extra for res in live)
+
+
+def test_shared_results_never_replay_as_cold(tmp_path):
+    ck = str(tmp_path / "ck.json")
+    kw = dict(policies=["eager"], tolerances=[1.0, 0.25])
+    shared = _capital_session().sweep(workers=1, share_stats=True,
+                                      checkpoint=ck, **kw)
+    # a cold sweep over the same grid must NOT reuse the shared journal
+    cold = _capital_session().sweep(workers=1, checkpoint=ck, **kw)
+    fresh = _capital_session().sweep(workers=1, **kw)
+    for c, f in zip(cold, fresh):
+        assert _strip(c) == _strip(f)
+    # while a repeated shared sweep DOES reuse it (wall_s included)
+    again = _capital_session().sweep(workers=1, share_stats=True,
+                                     checkpoint=ck, **kw)
+    assert [r.to_json() for r in again] == [r.to_json() for r in shared]
+
+
+class _FailNthOpen(SimBackend):
+    """Fails the N-th ``open`` (0-indexed) once — kills sweep task N."""
+
+    def __init__(self, fail_at: int, **kw):
+        super().__init__(**kw)
+        self.fail_at = fail_at
+        self.opens = 0
+
+    def open(self, *a, **kw):
+        n = self.opens
+        self.opens += 1
+        if n == self.fail_at:
+            raise RuntimeError("killed mid-sweep")
+        return super().open(*a, **kw)
+
+
+def test_kill_and_resume_restores_shared_prior(tmp_path):
+    """A share_stats sweep killed mid-run resumes with the shared prior
+    rebuilt from the checkpoint: the resumed run is bit-identical to an
+    uninterrupted one (serial dispatch order makes the shared priors
+    deterministic)."""
+    from repro.api.session import _Checkpoint
+    ck = str(tmp_path / "shared.json")
+    kw = dict(policies=["eager"], tolerances=[1.0, 0.25, 0.0625])
+
+    uninterrupted = _capital_session().sweep(workers=1, share_stats=True,
+                                             **kw)
+
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0, bias_sigma=0.0)
+    failing = _FailNthOpen(2, timer=cm.sample)
+    with pytest.raises(SchedulerError, match="killed mid-sweep"):
+        _capital_session(backend=failing).sweep(
+            workers=1, share_stats=True, checkpoint=ck, **kw)
+
+    # the checkpoint holds the first two points' results AND their
+    # accumulated shared bank
+    journal = _Checkpoint(ck)
+    bank = journal.shared_bank()
+    assert bank is not None and len(bank) > 0
+    assert len(journal._data["results"]) == 2
+
+    resumed = _capital_session().sweep(workers=1, share_stats=True,
+                                       checkpoint=ck, **kw)
+    assert [_strip(r) for r in resumed] == \
+        [_strip(r) for r in uninterrupted]
+    # the resumed third point really ran warm (not cold)
+    cold = _capital_session().sweep(workers=1, policies=["eager"],
+                                    tolerances=[0.0625])
+    assert sum(r.executed for r in resumed[2].records) < \
+        sum(r.executed for r in cold[0].records)
+
+
+# -- racing through the scheduler ----------------------------------------------
+
+def test_scheduler_drives_racing_sweeps():
+    session = AutotuneSession(space_of_study(_studies()[1]),
+                              backend=_golden_backend(), search="racing",
+                              trials=1, search_options={"max_rounds": 3})
+    kw = dict(policies=["online", "conditional"], tolerances=[0.25])
+    serial = session.sweep(workers=1, **kw)
+    names = {p.name for p in session.space.points}
+    assert len(serial) == 2
+    for r in serial:
+        assert r.search == "racing"
+        assert r.extra["best"] in names
+    if fork_available():
+        forked = AutotuneSession(
+            space_of_study(_studies()[1]), backend=_golden_backend(),
+            search="racing", trials=1,
+            search_options={"max_rounds": 3}).sweep(workers=2, **kw)
+        assert [_strip(r) for r in forked] == [_strip(r) for r in serial]
+
+
+# -- run_tasks compat shim -----------------------------------------------------
+
+def test_run_tasks_shim_preserves_contract():
+    from repro.api.parallel import run_tasks
+    landed = []
+    out = run_tasks([1, 2, 3], lambda t: {"t": t}, workers=2,
+                    on_result=lambda i, r: landed.append((i, r)))
+    assert out == [{"t": 1}, {"t": 2}, {"t": 3}]
+    assert sorted(landed) == [(0, {"t": 1}), (1, {"t": 2}), (2, {"t": 3})]

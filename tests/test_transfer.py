@@ -380,6 +380,59 @@ def test_structural_keys_normalize_world_geometry():
     assert "b128" in structural_key(p2p_sig("send", 100), 16)
 
 
+# -- per-key quality filters ---------------------------------------------------
+
+def test_filtered_drops_high_dispersion_entries():
+    tight = _stats_of([1.0, 1.02, 0.98, 1.0, 1.01, 0.99])
+    mixture = _stats_of([1.0, 1.1, 0.9, 4.0, 4.1, 3.9])   # two modes pooled
+    thin = _stats_of([2.0])                                # no variance yet
+    bank = StatisticsBank({"tight": tight, "mixture": mixture,
+                           "thin": thin})
+    f = bank.filtered(max_cv=0.5)
+    assert set(f.entries) == {"tight"}
+    assert f.entries["tight"].n == tight.n
+    # sources untouched, provenance recorded
+    assert set(bank.entries) == {"tight", "mixture", "thin"}
+    assert {"filter_max_cv": 0.5} in f.meta
+    # threshold is inclusive on the cv itself
+    assert "mixture" in bank.filtered(max_cv=10.0).entries
+
+
+def test_prior_filter_on_resetting_study():
+    """The ROADMAP regression (see the note on
+    test_warm_resetting_study_reseeds_every_configuration): golden-slate's
+    bank pools mixture distributions across the two tile configurations
+    under one structural key, and that high-dispersion prior delays skips.
+    Seeding through ``prior_max_cv`` drops exactly the dispersed entries,
+    so the filtered warm study executes no more than the unfiltered one —
+    strictly fewer here — while keeping the winner and the error bound."""
+    space = space_of_study(_studies()[0])          # golden-slate, resets
+    cold = _session(space, "online", collect_stats=True).run()
+    bank = cold.stats_bank()
+    cv = {k: st.std / st.mean for k, st in bank.entries.items()
+          if st.n > 1 and st.mean > 0}
+    assert max(cv.values()) > 0.5                  # the pooled mixture
+    warm = _session(space, "online", prior=bank).run()
+    filtered = _session(space, "online", prior=bank,
+                        prior_max_cv=0.5).run()
+    # the two golden-slate configs are near-ties (cold itself picks the
+    # slightly-worse one, optimum_quality 0.93): the filter must keep the
+    # warm study's pick and near-optimal selection quality
+    assert filtered.chosen.name == warm.chosen.name
+    assert filtered.optimum_quality > 0.99
+    assert sum(r.executed for r in filtered.records) < \
+        sum(r.executed for r in warm.records)
+    assert sum(r.executed for r in filtered.records) < \
+        sum(r.executed for r in cold.records)
+    assert all(r.rel_error <= 0.25 for r in filtered.records)
+    # the filter is part of the session's prior identity: journaled
+    # filtered results never replay as unfiltered warm ones
+    s_warm = _session(space, "online", prior=bank)
+    s_filt = _session(space, "online", prior=bank, prior_max_cv=0.5)
+    assert s_warm._key(s_warm._policy(), 0, 0) != \
+        s_filt._key(s_filt._policy(), 0, 0)
+
+
 # -- discounting and the copula remap ----------------------------------------
 
 def test_discount_widens_ci_and_preserves_moments():
