@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Repo gate: tier-1 tests + engine-throughput sanity + session-API smoke +
 # scheduler (fork + localhost-remote-worker) smoke + transfer smoke +
-# hypothesis property-suite guard.
+# chaos (supervised fleet with fault injection) smoke + hypothesis
+# property-suite guard.
 #
 # Usage:
 #   bash scripts/check.sh                      # all stages
@@ -9,7 +10,7 @@
 #   bash scripts/check.sh --skip-tests         # legacy: all but tests
 #   bash scripts/check.sh --out results.json   # summary path
 #
-# Stages: tests, engine, session, scheduler, transfer, hypothesis.
+# Stages: tests, engine, session, scheduler, transfer, chaos, hypothesis.
 #
 # Every invocation writes a per-stage JSON summary (exit code, wall
 # seconds, measured throughput ratios where applicable) to
@@ -243,6 +244,72 @@ print(f'RATIO_JSON "scheduler_points": {len(remote)}, "remote_workers": 1')
 EOF
 }
 
+stage_chaos() {
+    # fault-tolerance smoke: a listening RemoteExecutor fed by a supervised
+    # 2-worker connect-mode fleet, where a FaultPlan kills one worker on
+    # its first task.  The supervisor must restart it, the executor must
+    # re-admit it, the killed task must be retried — and the merged sweep
+    # must stay bit-identical to the serial driver.
+    PYTHONPATH="src:tests${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, "tests")
+from repro.api import (AutotuneSession, RemoteExecutor, SimBackend,
+                       WorkerPool, WorkerSpec)
+from golden_runner import golden_space
+
+space = golden_space(1)            # tiny Capital study, world 8
+
+
+def sess():
+    return AutotuneSession(space, backend=SimBackend(), trials=2)
+
+
+def strip(r):
+    d = r.to_json()
+    d.pop("wall_s", None)
+    d.get("extra", {}).pop("recovery", None)
+    return d
+
+
+kw = dict(policies=["conditional", "eager"], tolerances=[0.25])
+serial = [strip(r) for r in sess().sweep(workers=1, **kw)]
+
+ex = RemoteExecutor(listen="127.0.0.1:0", join_timeout=60,
+                    task_timeout=300, expect={"space": space.name})
+marker = os.path.join(tempfile.mkdtemp(prefix="repro-chaos-"), "kill")
+spec = dict(spec="golden_runner:golden_space", spec_args={"index": 1},
+            connect=ex.listen_address)
+specs = [WorkerSpec(faults={"kill_after": 1, "marker": marker}, **spec),
+         WorkerSpec(**spec)]
+session = sess()
+with WorkerPool(specs, restart_backoff=0.1) as pool:
+    got = session.sweep(executor=ex, max_retries=3, **kw)
+    if [strip(r) for r in got] != serial:
+        print("FAIL: chaos sweep diverged from the serial driver")
+        sys.exit(1)
+    if not os.path.exists(marker):
+        print("FAIL: the FaultPlan kill never fired")
+        sys.exit(1)
+    recovered = [r for r in got if "recovery" in r.extra]
+    if not recovered:
+        print("FAIL: no sweep point carries recovery provenance")
+        sys.exit(1)
+    restarts = pool.restarts()
+names = {e["event"] for e in session.last_sweep_events}
+for must in ("worker_joined", "worker_lost", "task_retry"):
+    if must not in names:
+        print(f"FAIL: no {must} event in the sweep journal ({names})")
+        sys.exit(1)
+print(f"chaos OK: worker killed mid-task, {restarts} supervisor "
+      f"restart(s), {len(recovered)} point(s) recovered, sweep == serial")
+print(f'RATIO_JSON "chaos_points": {len(got)}, '
+      f'"worker_restarts": {restarts}')
+EOF
+}
+
 stage_transfer() {
     python - <<'EOF'
 import sys
@@ -303,10 +370,10 @@ stage_hypothesis() {
 }
 
 case "$STAGE" in
-    all)      STAGES=(tests engine session scheduler transfer hypothesis) ;;
-    no-tests) STAGES=(engine session scheduler transfer hypothesis) ;;
-    tests|engine|session|scheduler|transfer|hypothesis) STAGES=("$STAGE") ;;
-    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|hypothesis)" >&2
+    all)      STAGES=(tests engine session scheduler transfer chaos hypothesis) ;;
+    no-tests) STAGES=(engine session scheduler transfer chaos hypothesis) ;;
+    tests|engine|session|scheduler|transfer|chaos|hypothesis) STAGES=("$STAGE") ;;
+    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|chaos|hypothesis)" >&2
        exit 2 ;;
 esac
 

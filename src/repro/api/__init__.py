@@ -23,11 +23,17 @@ Pieces:
   grids scheduled as explicit-state tasks over pluggable executors —
   in-process, fork-pool, socket-remote workers — with optional mid-sweep
   statistics sharing (``session``, ``scheduler``; workers launch via
-  ``python -m repro.api.worker``).
+  ``python -m repro.api.worker``);
+- fault tolerance: per-task retries with backoff and attempt history,
+  heartbeats/deadlines for wedged workers, elastic mid-sweep worker
+  join, ``WorkerPool`` supervision with crash restarts
+  (``supervisor``), and a seeded chaos harness — ``FaultPlan`` /
+  ``FaultInjector`` (``faults``).
 """
 
 from .backends import (Backend, BackendRun, DryRunBackend, Measurement,
                        SimBackend, WallClockBackend, dryrun_space)
+from .faults import FaultInjector, FaultPlan
 from .result import ConfigRecord, StudyResult
 from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
                         RemoteExecutor, Scheduler, SchedulerError, Task,
@@ -36,14 +42,16 @@ from .search import SEARCHES, exhaustive, measure_config, racing
 from .serialize import dumps_canonical, from_jsonable, to_jsonable
 from .session import AutotuneSession, run_payload
 from .space import RESET_POLICY, ConfigPoint, SearchSpace
+from .supervisor import WorkerPool, WorkerSpec
 from .transfer import StatisticsBank
 
 __all__ = [
     "AutotuneSession", "Backend", "BackendRun", "ConfigPoint",
-    "ConfigRecord", "DryRunBackend", "Executor", "ForkExecutor",
-    "InProcessExecutor", "Measurement", "RESET_POLICY", "RemoteExecutor",
-    "SEARCHES", "Scheduler", "SchedulerError", "SearchSpace", "SimBackend",
-    "StatisticsBank", "StudyResult", "Task", "WallClockBackend",
+    "ConfigRecord", "DryRunBackend", "Executor", "FaultInjector",
+    "FaultPlan", "ForkExecutor", "InProcessExecutor", "Measurement",
+    "RESET_POLICY", "RemoteExecutor", "SEARCHES", "Scheduler",
+    "SchedulerError", "SearchSpace", "SimBackend", "StatisticsBank",
+    "StudyResult", "Task", "WallClockBackend", "WorkerPool", "WorkerSpec",
     "dryrun_space", "dumps_canonical", "exhaustive", "fork_available",
     "from_jsonable", "measure_config", "racing", "run_payload",
     "to_jsonable",

@@ -59,6 +59,7 @@ from __future__ import annotations
 import itertools
 import json
 import os
+import tempfile
 import time
 from dataclasses import asdict, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
@@ -68,7 +69,7 @@ from repro.core.policies import Policy, policy as make_policy
 from . import search as _search
 from .backends import Backend
 from .result import StudyResult
-from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
+from .scheduler import (FAILED, Executor, ForkExecutor, InProcessExecutor,
                         Scheduler, Task, fork_available)
 from .serialize import dumps_canonical
 from .space import SearchSpace
@@ -116,6 +117,9 @@ class AutotuneSession:
         self.prior_discount = prior_discount
         self.prior_max_cv = prior_max_cv
         self.collect_stats = bool(collect_stats)
+        #: recovery events of the most recent sweep (retries, worker
+        #: loss/join, deadlines) — also journaled to the checkpoint
+        self.last_sweep_events: List[dict] = []
         if isinstance(policy, Policy):
             self._base_policy = policy if tolerance is None \
                 else replace(policy, tolerance=tolerance)
@@ -266,7 +270,10 @@ class AutotuneSession:
               checkpoint: Optional[str] = None,
               executor: Optional[Executor] = None,
               share_stats: bool = False,
-              deterministic: bool = False) -> List[StudyResult]:
+              deterministic: bool = False,
+              max_retries: int = 0,
+              retry_backoff: float = 0.25,
+              on_failure: str = "raise") -> List[StudyResult]:
         """The paper's measurement grid (§VI.A): one independent study per
         (policy, tolerance, seed, allocation), scheduled as tasks on an
         executor (``workers`` forks; pass ``executor=`` for remote
@@ -277,7 +284,25 @@ class AutotuneSession:
         ``deterministic=True`` defers that sharing to checkpoint
         boundaries (tasks only warm-start from banks a *previous*
         invocation persisted to the checkpoint), keeping each invocation
-        bit-identical to the serial driver under the same seed bank."""
+        bit-identical to the serial driver under the same seed bank.
+
+        Failure semantics (fleet sweeps): a failed sweep point (worker
+        death, task deadline, task exception) is retried up to
+        ``max_retries`` times with exponential backoff
+        (``retry_backoff * 2**(n-1)`` seconds); the retried task's payload
+        is rebuilt at re-dispatch, so deterministic sweeps stay
+        bit-identical to the serial driver.  When retries are exhausted,
+        ``on_failure="raise"`` (default) raises ``SchedulerError`` with
+        the full attempt history, while ``on_failure="skip"`` leaves that
+        grid slot ``None`` in the returned list and journals the failure
+        (with its attempt history) into the checkpoint — a later
+        invocation with the same checkpoint re-attempts exactly the
+        failed points.  Every recovery event (retry, worker loss/join,
+        deadline, heartbeat timeout) is journaled into the checkpoint's
+        ``events`` list and kept on ``self.last_sweep_events``; a result
+        that needed retries carries them in
+        ``StudyResult.extra["recovery"]``, so downstream drift analysis
+        can attribute anomalies to infrastructure."""
         policies = list(policies) if policies is not None \
             else [self._base_policy.name]
         tolerances = list(tolerances) if tolerances is not None \
@@ -328,6 +353,13 @@ class AutotuneSession:
                                checkpoint=inflight_ck,
                                session=self)
 
+        events: List[dict] = []
+
+        def on_event(ev: dict) -> None:
+            events.append(ev)
+            if ck:
+                ck.add_event(ev)
+
         def on_done(task: Task) -> None:
             i, _ = task.spec
             res = task.result
@@ -336,12 +368,31 @@ class AutotuneSession:
                 shared.add(bank_json)
             if collect and not self.collect_stats and bank_json:
                 res["extra"].pop("kernel_stats", None)
+            if task.attempts:
+                # infrastructure provenance: this point only succeeded
+                # after recovery — surfaced so drift analysis can tell
+                # fleet trouble from protocol change
+                res.setdefault("extra", {})["recovery"] = {
+                    "retries": len(task.attempts),
+                    "attempts": task.attempts}
             results[i] = StudyResult.from_json(res)
             if ck:
                 ck.add_result(keys[i], results[i])
 
-        Scheduler(executor, runner).run(todo, prepare=prepare,
-                                        on_done=on_done)
+        done = Scheduler(executor, runner, max_retries=max_retries,
+                         retry_backoff=retry_backoff,
+                         on_failure=on_failure,
+                         on_event=on_event).run(todo, prepare=prepare,
+                                                on_done=on_done)
+        # on_failure="skip": exhausted points stay None in the merged list
+        # and their attempt histories are journaled, so a resumed sweep
+        # re-attempts exactly these
+        for task in done:
+            if task.state == FAILED:
+                i, _ = task.spec
+                if ck:
+                    ck.add_failure(keys[i], task.attempts)
+        self.last_sweep_events = events
         return list(results)
 
 
@@ -433,11 +484,21 @@ class _Checkpoint:
     One file holds a dict keyed by the study key's canonical JSON:
     ``{"results": {key: result_json},
        "records": {key: {"recs": [record_json], "carry": state}},
-       "shared_bank": bank_json}`` — the last entry is the accumulated
+       "shared_bank": bank_json,
+       "failures": {key: {"attempts": [...]}},
+       "events": [event, ...]}`` — ``shared_bank`` is the accumulated
     mid-sweep statistics bank of ``share_stats`` sweeps, so a resumed
-    sweep restores the shared prior its killed predecessor had earned.
-    Writes are atomic (tmp + rename) after every landed unit, so a killed
-    sweep loses at most the in-flight measurement.
+    sweep restores the shared prior its killed predecessor had earned;
+    ``failures`` are sweep points whose retries were exhausted under
+    ``on_failure="skip"`` (kept with their attempt history; a completed
+    re-attempt supersedes the entry) and ``events`` is the recovery
+    journal (retries, worker loss/join/restart, timeouts).
+
+    Writes are crash-safe: each flush serializes into a uniquely-named
+    temp file in the destination directory, fsyncs it, and atomically
+    ``os.replace``s it into place — a worker/driver killed mid-write can
+    never leave a truncated journal that blocks resume, and concurrent
+    flushers cannot trample each other's temp file.
     """
 
     def __init__(self, path: str):
@@ -460,10 +521,20 @@ class _Checkpoint:
     def _flush(self) -> None:
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._data, f)
-        os.replace(tmp, self.path)
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(self.path) + ".", suffix=".tmp", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     def result_for(self, key: dict) -> Optional[StudyResult]:
         got = self._data["results"].get(self._k(key))
@@ -473,7 +544,30 @@ class _Checkpoint:
         k = self._k(key)
         self._data["results"][k] = result.to_json()
         self._data["records"].pop(k, None)   # subsumed by the full result
+        # a completed re-attempt supersedes a journaled failure
+        self._data.get("failures", {}).pop(k, None)
         self._flush()
+
+    def add_failure(self, key: dict, attempts: List[dict]) -> None:
+        """Journal an exhausted-retries sweep point (``on_failure="skip"``)
+        with its full attempt history; the point is NOT treated as done —
+        a resumed sweep re-attempts it."""
+        self._data.setdefault("failures", {})[self._k(key)] = {
+            "attempts": attempts}
+        self._flush()
+
+    def failure_for(self, key: dict) -> Optional[dict]:
+        """The journaled failure entry for a sweep point, or ``None``."""
+        return self._data.get("failures", {}).get(self._k(key))
+
+    def add_event(self, event: dict) -> None:
+        """Append one recovery event (retry, worker loss/join/restart,
+        heartbeat/deadline timeout) to the sweep's journal."""
+        self._data.setdefault("events", []).append(event)
+        self._flush()
+
+    def events(self) -> List[dict]:
+        return list(self._data.get("events", []))
 
     def partial(self, key: dict):
         """(records-so-far, carry-state-after-the-last-one)."""

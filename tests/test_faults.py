@@ -1,0 +1,230 @@
+"""Chaos-harness tests: ``repro.api.faults`` + fleet fault tolerance.
+
+- ``FaultPlan``: JSON roundtrip, counter-deterministic schedule, marker
+  files arming lethal faults exactly once across restarts;
+- ``FaultInjector``: targeted and seeded executor-level sabotage — a
+  killed task is retried and the merged sweep is bit-identical to the
+  serial driver (the chaos acceptance property), with the recovery
+  provenance surfaced in ``StudyResult.extra``;
+- ``on_failure="skip"``: a persistently-failing sweep point exhausts its
+  retries, the rest of the grid completes, the failure (with attempt
+  history) and every recovery event land in the checkpoint, and a
+  resumed sweep re-attempts exactly the failed point;
+- ``_Checkpoint`` crash safety: a failed flush leaves the journal intact
+  and no stray temp files;
+- the full acceptance smoke: a supervised 2-worker fleet where chaos
+  kills one worker mid-task — the supervisor restarts it, it rejoins the
+  listening executor, and the sweep finishes bit-identical to serial.
+"""
+
+import os
+
+import pytest
+
+from repro.api import (AutotuneSession, FaultInjector, FaultPlan,
+                       RemoteExecutor, SimBackend, WorkerPool, WorkerSpec)
+from repro.api.scheduler import InProcessExecutor
+from repro.api.session import _Checkpoint
+
+from golden_runner import golden_space
+
+KW = dict(policies=["conditional", "eager"], tolerances=[0.25])
+
+
+def _sess(backend=None):
+    return AutotuneSession(golden_space(1),
+                           backend=backend or SimBackend(), trials=2)
+
+
+def _strip(result) -> dict:
+    d = result.to_json()
+    d.pop("wall_s", None)
+    d.get("extra", {}).pop("recovery", None)
+    return d
+
+
+def _env() -> dict:
+    here = os.path.dirname(__file__)
+    src = os.path.abspath(os.path.join(here, os.pardir, "src"))
+    return {"PYTHONPATH": os.pathsep.join(
+        [src, here] + os.environ.get("PYTHONPATH", "").split(os.pathsep))}
+
+
+# -- FaultPlan -----------------------------------------------------------------
+
+def test_fault_plan_roundtrip_and_marker(tmp_path):
+    marker = str(tmp_path / "fired")
+    plan = FaultPlan(kill_after=2, delay_s=0.01, marker=marker)
+    assert FaultPlan.from_json(plan.to_json()) == plan
+
+    # the marker arms lethal faults exactly once: a supervisor-restarted
+    # worker finds it and runs clean
+    armed = FaultPlan(hang_after=1, hang_s=0.0, marker=marker)
+    assert armed._armed()
+    armed.before_task()
+    assert os.path.exists(marker)
+    restarted = FaultPlan(hang_after=1, hang_s=0.0, marker=marker)
+    assert not restarted._armed()
+
+
+def test_fault_plan_reply_schedule():
+    p = FaultPlan(drop_after=1, corrupt_after=2)
+    p.before_task()
+    assert p.transform_reply(b'{"ok": 1}\n') is None       # dropped
+    p.before_task()
+    corrupted = p.transform_reply(b'{"ok": 2}\n')
+    with pytest.raises(ValueError):
+        __import__("json").loads(corrupted)                # really garbage
+    p.before_task()
+    assert p.transform_reply(b'{"ok": 3}\n') == b'{"ok": 3}\n'
+
+
+# -- FaultInjector -------------------------------------------------------------
+
+def test_injected_kill_is_retried_bit_identical():
+    serial = [_strip(r) for r in _sess().sweep(workers=1, **KW)]
+    ex = FaultInjector(InProcessExecutor(), kill_tasks=[0])
+    sess = _sess()
+    chaotic = sess.sweep(executor=ex, max_retries=2, **KW)
+    assert [_strip(r) for r in chaotic] == serial
+    # the kill left provenance: one retry, chaos named as the worker
+    rec = chaotic[0].extra["recovery"]
+    assert rec["retries"] == 1
+    assert rec["attempts"][0]["worker"] == "chaos"
+    assert ex.log == [{"task": 0, "fate": "kill"}]
+    names = {e["event"] for e in sess.last_sweep_events}
+    assert "chaos_kill" in names and "task_retry" in names
+    # the clean point carries no recovery entry
+    assert "recovery" not in chaotic[1].extra
+
+
+def test_seeded_chaos_sweep_completes_under_retries():
+    serial = [_strip(r) for r in _sess().sweep(workers=1, **KW)]
+    ex = FaultInjector(InProcessExecutor(), seed=7, kill_prob=0.4,
+                       corrupt_prob=0.3, max_faults=3)
+    got = _sess().sweep(executor=ex, max_retries=5, **KW)
+    assert [_strip(r) for r in got] == serial
+    assert len(ex.log) <= 3                 # the fault budget bounds chaos
+
+
+# -- skip / checkpoint / resume ------------------------------------------------
+
+class _CursedTol(SimBackend):
+    """Persistently fails every attempt at one grid point: retries
+    cannot save it, only ``on_failure="skip"`` can save the sweep."""
+
+    def __init__(self, bad_tol, **kw):
+        super().__init__(**kw)
+        self.bad_tol = bad_tol
+
+    def open(self, space, policy, **kw):
+        if policy.tolerance == self.bad_tol:
+            raise RuntimeError(f"tolerance {policy.tolerance} is cursed")
+        return super().open(space, policy, **kw)
+
+
+def test_skip_journals_failure_and_resume_completes(tmp_path):
+    ck = str(tmp_path / "ck.json")
+    kw = dict(policies=["eager"], tolerances=[1.0, 0.25, 0.0625])
+    got = _sess(_CursedTol(0.25)).sweep(workers=1, checkpoint=ck,
+                                        max_retries=1, on_failure="skip",
+                                        **kw)
+    # partial results: the cursed slot is None, the rest completed
+    assert got[1] is None
+    assert got[0] is not None and got[2] is not None
+
+    journal = _Checkpoint(ck)
+    fail, = journal._data["failures"].values()
+    assert len(fail["attempts"]) == 2       # first try + one retry
+    assert "cursed" in fail["attempts"][0]["error"]
+    assert any(e["event"] == "task_retry" for e in journal.events())
+    assert any(e["event"] == "task_failed" for e in journal.events())
+
+    # resume with a healthy backend: exactly the failed point re-runs
+    resumed = _sess().sweep(workers=1, checkpoint=ck, **kw)
+    ref = _sess().sweep(workers=1, **kw)
+    assert [_strip(r) for r in resumed] == [_strip(r) for r in ref]
+    # the completed re-attempt superseded the journaled failure
+    assert not _Checkpoint(ck)._data.get("failures")
+
+
+def test_skip_without_checkpoint_returns_partial(tmp_path):
+    got = _sess(_CursedTol(0.25)).sweep(
+        workers=1, max_retries=0, on_failure="skip",
+        policies=["eager"], tolerances=[1.0, 0.25])
+    assert got[1] is None and got[0] is not None
+
+
+def test_checkpoint_flush_is_crash_safe(tmp_path):
+    path = str(tmp_path / "ck.json")
+    ck = _Checkpoint(path)
+    ck.add_event({"event": "probe"})
+    before = open(path).read()
+    # poison the journal: the flush fails mid-serialize, but the file on
+    # disk must stay the last good journal, with no temp debris
+    ck._data["poison"] = object()
+    with pytest.raises(TypeError):
+        ck.add_event({"event": "second"})
+    assert open(path).read() == before
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+    assert _Checkpoint(path).events() == [{"event": "probe"}]
+
+
+def test_wedged_worker_task_reassigned_live(tmp_path):
+    """A real worker wedged by ``FaultPlan(hang_after=1)`` trips the task
+    deadline; the task reassigns to the healthy worker and the sweep
+    stays bit-identical.  Also pins that an *idle* connect-mode worker
+    survives multi-second gaps between tasks (the healthy worker sits
+    idle for the whole 3s deadline; a leftover dial timeout on its socket
+    used to kill it exactly here)."""
+    space = golden_space(1)
+    serial = [_strip(r) for r in _sess().sweep(workers=1, **KW)]
+
+    ex = RemoteExecutor(listen="127.0.0.1:0", join_timeout=60,
+                        task_timeout=3.0, expect={"space": space.name})
+    marker = str(tmp_path / "hang.marker")
+    spec = dict(spec="golden_runner:golden_space", spec_args={"index": 1},
+                connect=ex.listen_address, env=_env())
+    specs = [WorkerSpec(faults={"hang_after": 1, "marker": marker},
+                        **spec),
+             WorkerSpec(**spec)]
+    sess = _sess()
+    with WorkerPool(specs, restart_backoff=0.1):
+        got = sess.sweep(executor=ex, max_retries=3, **KW)
+    assert [_strip(r) for r in got] == serial
+    names = {e["event"] for e in sess.last_sweep_events}
+    assert "task_deadline" in names and "task_retry" in names
+
+
+# -- the acceptance smoke: kill, restart, rejoin, finish -----------------------
+
+def test_chaos_kill_supervised_fleet_completes_bit_identical(tmp_path):
+    """Chaos kills 1 of 2 workers mid-task; the supervisor restarts it,
+    it rejoins the listening executor, the killed task is retried, and
+    the sweep lands bit-identical to the serial driver."""
+    space = golden_space(1)
+    serial = [_strip(r) for r in _sess().sweep(workers=1, **KW)]
+
+    ex = RemoteExecutor(listen="127.0.0.1:0", join_timeout=60,
+                        task_timeout=120, expect={"space": space.name})
+    marker = str(tmp_path / "kill.marker")
+    spec = dict(spec="golden_runner:golden_space",
+                spec_args={"index": 1}, connect=ex.listen_address,
+                env=_env())
+    specs = [WorkerSpec(faults={"kill_after": 1, "marker": marker},
+                        **spec),
+             WorkerSpec(**spec)]
+    sess = _sess()
+    with WorkerPool(specs, restart_backoff=0.1) as pool:
+        got = sess.sweep(executor=ex, max_retries=3, **KW)
+        assert [_strip(r) for r in got] == serial
+        assert os.path.exists(marker)       # the kill really fired
+        recoveries = [r.extra["recovery"] for r in got
+                      if "recovery" in r.extra]
+        assert recoveries and recoveries[0]["retries"] >= 1
+        assert pool.restarts() >= 1         # supervisor brought it back
+    assert any(e["event"] == "worker_restart" for e in pool.events)
+    names = {e["event"] for e in sess.last_sweep_events}
+    assert "worker_joined" in names         # elastic join happened
+    assert "worker_lost" in names           # the kill was observed
+    assert "task_retry" in names            # and recovered from

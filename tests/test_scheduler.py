@@ -12,14 +12,22 @@
   checkpoint;
 - the scheduler drives racing sweeps end-to-end;
 - task lifecycle: explicit pending/running/done/failed states, failure
-  propagation as ``SchedulerError``.
+  propagation as ``SchedulerError``;
+- fault tolerance: transient failures retried with attempt history and
+  exponential backoff, ``on_failure="skip"`` partial sweeps, heartbeat
+  and task-deadline liveness against protocol-stub workers, elastic
+  mid-sweep worker join, worker survival across abrupt disconnects.
 """
 
 import json
 import os
 import re
+import socket
+import struct
 import subprocess
 import sys
+import threading
+import time
 
 import pytest
 
@@ -52,6 +60,8 @@ def _capital_session(backend=None, **kw):
 def _strip(result) -> dict:
     d = result.to_json()
     d.pop("wall_s", None)
+    # recovery provenance is infrastructure history, not measurement
+    d.get("extra", {}).pop("recovery", None)
     return d
 
 
@@ -141,6 +151,92 @@ def test_scheduler_raises_when_capacity_exhausted():
         Scheduler(_DyingExecutor(), lambda p: {"v": p}).run([1, 2, 3])
 
 
+# -- retries and failure policy ------------------------------------------------
+
+def test_retry_recovers_transient_failure():
+    calls = {"n": 0}
+
+    def runner(payload):
+        if payload == 1:
+            calls["n"] += 1
+            if calls["n"] < 3:
+                raise ValueError(f"flaky {calls['n']}")
+        return {"v": payload}
+
+    events = []
+    tasks = Scheduler(InProcessExecutor(), runner, max_retries=2,
+                      on_event=events.append).run([0, 1, 2])
+    assert [t.state for t in tasks] == [DONE] * 3
+    t = tasks[1]
+    assert t.result == {"v": 1}
+    assert t.meta["retries"] == 2
+    assert [a["attempt"] for a in t.attempts] == [1, 2]
+    assert "flaky 1" in t.attempts[0]["error"]
+    assert t.attempts[0]["worker"] == "in-process"
+    retries = [e for e in events if e["event"] == "task_retry"]
+    assert [e["task"] for e in retries] == [1, 1]
+    # tasks that never failed carry no history
+    assert tasks[0].attempts == [] and "retries" not in tasks[0].meta
+
+
+def test_retries_exhausted_raises_with_history():
+    def runner(payload):
+        raise ValueError("always boom")
+
+    with pytest.raises(SchedulerError,
+                       match=r"failed after 3 attempt") as ei:
+        Scheduler(InProcessExecutor(), runner, max_retries=2).run([7])
+    t = ei.value.task
+    assert t.state == FAILED
+    assert len(t.attempts) == 3
+    msg = str(ei.value)
+    assert "attempt 2 on in-process" in msg
+    assert "always boom" in msg          # the last traceback rides along
+
+
+def test_on_failure_skip_completes_rest_of_grid():
+    def runner(payload):
+        if payload == "bad":
+            raise RuntimeError("persistent")
+        return {"v": payload}
+
+    events = []
+    tasks = Scheduler(InProcessExecutor(), runner, max_retries=1,
+                      on_failure="skip",
+                      on_event=events.append).run(["a", "bad", "b"])
+    assert [t.state for t in tasks] == [DONE, FAILED, DONE]
+    assert tasks[1].result is None
+    assert len(tasks[1].attempts) == 2
+    assert tasks[0].result == {"v": "a"} and tasks[2].result == {"v": "b"}
+    assert any(e["event"] == "task_failed" for e in events)
+
+
+def test_interrupts_are_not_retried():
+    """Ctrl-C must stop the sweep, not masquerade as a flaky task."""
+    def runner(payload):
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        Scheduler(InProcessExecutor(), runner, max_retries=5).run([1])
+
+
+def test_retry_backoff_is_exponential():
+    def runner(payload):
+        raise ValueError("nope")
+
+    events = []
+    with pytest.raises(SchedulerError):
+        Scheduler(InProcessExecutor(), runner, max_retries=2,
+                  retry_backoff=0.05, on_event=events.append).run([0])
+    delays = [e["delay_s"] for e in events if e["event"] == "task_retry"]
+    assert delays == [0.05, 0.1]
+
+
+def test_invalid_on_failure_rejected():
+    with pytest.raises(ValueError, match="on_failure"):
+        Scheduler(InProcessExecutor(), on_failure="explode")
+
+
 # -- executor equivalence on real sweeps ---------------------------------------
 
 def test_serial_vs_fork_vs_remote_same_results(tmp_path):
@@ -172,10 +268,14 @@ def test_serial_vs_fork_vs_remote_same_results(tmp_path):
 
 class _worker:
     """Launch ``python -m repro.api.worker`` serving the tiny golden
-    Capital space on an ephemeral localhost port."""
+    Capital space — listening on an ephemeral localhost port, or dialing
+    a listening executor (``connect=``, elastic-join mode)."""
 
-    def __init__(self, index: int):
+    def __init__(self, index: int, once: bool = True,
+                 connect: str = None):
         self.index = index
+        self.once = once
+        self.connect = connect
         self.proc = None
 
     def __enter__(self) -> str:
@@ -184,17 +284,24 @@ class _worker:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.pathsep.join(
             [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+        cmd = [sys.executable, "-m", "repro.api.worker",
+               "--spec", "golden_runner:golden_space",
+               "--spec-args", json.dumps({"index": self.index})]
+        if self.connect:
+            cmd += ["--connect", self.connect]
+        else:
+            cmd += ["--port", "0"]
+            if self.once:
+                cmd += ["--once"]
         self.proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.api.worker",
-             "--spec", "golden_runner:golden_space",
-             "--spec-args", json.dumps({"index": self.index}),
-             "--port", "0", "--once"],
-            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
-            env=env)
+            cmd, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True, env=env)
         line = self.proc.stdout.readline()
-        m = re.match(r"WORKER_READY (\S+) (\d+)", line)
+        m = re.match(r"WORKER_READY (\S+) (\S+)", line)
         assert m, (f"worker failed to start: {line!r}\n"
                    f"{self.proc.stderr.read()}")
+        if m.group(1) == "connect":
+            return m.group(2)
         return f"{m.group(1)}:{m.group(2)}"
 
     def __exit__(self, *exc):
@@ -207,6 +314,144 @@ def test_remote_worker_rejects_wrong_spec():
         ex = RemoteExecutor([addr], expect={"space": "golden-capital"})
         with pytest.raises(SchedulerError, match="golden-slate"):
             ex.start(None)
+
+
+def test_worker_answers_ping():
+    """The ``{"op": "ping"}`` liveness heartbeat of the worker protocol."""
+    with _worker(1) as addr:
+        host, port = addr.rsplit(":", 1)
+        with socket.create_connection((host, int(port)), timeout=10) as s:
+            s.sendall(b'{"op": "ping"}\n{"op": "shutdown"}\n')
+            f = s.makefile("rb")
+            assert json.loads(f.readline()) == {"ok": "pong"}
+            assert json.loads(f.readline()) == {"ok": "bye"}
+
+
+def test_worker_survives_abrupt_disconnect():
+    """A scheduler that vanishes mid-session (RST, not FIN) costs one
+    connection, not the worker — the next scheduler connects fine."""
+    with _worker(1, once=False) as addr:
+        host, port = addr.rsplit(":", 1)
+        s1 = socket.create_connection((host, int(port)), timeout=10)
+        s1.sendall(b'{"op": "hello"}\n')
+        assert b'"ok"' in s1.makefile("rb").readline()
+        s1.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                      struct.pack("ii", 1, 0))
+        s1.close()                                   # hard reset
+        with socket.create_connection((host, int(port)), timeout=10) as s2:
+            s2.sendall(b'{"op": "ping"}\n{"op": "shutdown"}\n')
+            f = s2.makefile("rb")
+            assert json.loads(f.readline()) == {"ok": "pong"}
+            assert json.loads(f.readline()) == {"ok": "bye"}
+
+
+def test_elastic_worker_joins_listening_executor():
+    """``RemoteExecutor(listen=...)`` starts with zero workers; a
+    ``--connect`` worker dials in mid-sweep and supplies the capacity."""
+    space = golden_space(1)
+    ex = RemoteExecutor(listen=0, join_timeout=30,
+                        expect={"space": space.name})
+    sess = AutotuneSession(space, backend=SimBackend(), trials=2)
+    kw = dict(policies=["eager"], tolerances=[0.25])
+    with _worker(1, connect=ex.listen_address):
+        got = [_strip(r) for r in sess.sweep(executor=ex, **kw)]
+    serial = [_strip(r) for r in AutotuneSession(
+        space, backend=SimBackend(), trials=2).sweep(workers=1, **kw)]
+    assert got == serial
+    assert any(e["event"] == "worker_joined"
+               for e in sess.last_sweep_events)
+
+
+# -- liveness against protocol stubs -------------------------------------------
+
+class _stub_worker:
+    """Protocol-level stub for liveness tests: answers ``hello``, never
+    answers ``ping``; ``run`` requests are echoed (``echo``) or silently
+    swallowed (``wedge`` — alive but stuck)."""
+
+    def __init__(self, mode: str = "echo"):
+        self.mode = mode
+        self.srv = socket.create_server(("127.0.0.1", 0))
+        h, p = self.srv.getsockname()[:2]
+        self.addr = f"{h}:{p}"
+        self.thread = threading.Thread(target=self._serve, daemon=True)
+        self.thread.start()
+
+    def _serve(self):
+        try:
+            conn, _ = self.srv.accept()
+        except OSError:
+            return
+        buf = bytearray()
+        with conn:
+            while True:
+                try:
+                    chunk = conn.recv(1 << 16)
+                except OSError:
+                    return
+                if not chunk:
+                    return
+                buf += chunk
+                while b"\n" in buf:
+                    line, _, rest = bytes(buf).partition(b"\n")
+                    buf[:] = rest
+                    msg = json.loads(line)
+                    op = msg.get("op")
+                    if op == "hello":
+                        conn.sendall(json.dumps(
+                            {"ok": {"space": "stub", "n_points": 1,
+                                    "backend": {}}}).encode() + b"\n")
+                    elif op == "run" and self.mode == "echo":
+                        conn.sendall(json.dumps(
+                            {"id": msg["id"],
+                             "ok": {"v": msg["task"]}}).encode() + b"\n")
+                    # pings and wedged runs: no reply, ever
+
+    def close(self):
+        self.srv.close()
+
+
+def test_heartbeat_drops_silent_idle_worker():
+    """An idle worker that stops answering pings is dropped before a
+    task is wasted on it."""
+    w = _stub_worker()
+    ex = RemoteExecutor([w.addr], heartbeat_interval=0.1)
+    try:
+        ex.start(None)
+        assert ex.capacity == 1
+        t0 = time.monotonic()
+        ex._check_heartbeats(t0 + 0.2)      # idle past interval: ping out
+        st, = ex._workers.values()
+        assert st["ping_sent"] is not None
+        ex._check_heartbeats(t0 + 0.4)      # unanswered a full interval
+        assert ex.capacity == 0
+        assert any(e["event"] == "heartbeat_timeout"
+                   for e in ex.drain_events())
+    finally:
+        ex.close()
+        w.close()
+
+
+def test_task_deadline_reassigns_wedged_worker_task():
+    """A wedged worker (socket open, no reply) trips the per-task
+    deadline; its task is reassigned and the sweep completes — without
+    the deadline, ``poll`` would block forever."""
+    wedge, good = _stub_worker("wedge"), _stub_worker("echo")
+    events = []
+    ex = RemoteExecutor([wedge.addr, good.addr], task_timeout=0.5)
+    try:
+        tasks = Scheduler(ex, None, max_retries=1,
+                          on_event=events.append).run([10, 20])
+        assert [t.state for t in tasks] == [DONE, DONE]
+        assert [t.result for t in tasks] == [{"v": 10}, {"v": 20}]
+        retried, = [t for t in tasks if t.attempts]
+        assert retried.meta["retries"] == 1
+        assert "task deadline" in retried.attempts[0]["error"]
+        names = {e["event"] for e in events}
+        assert "task_deadline" in names and "task_retry" in names
+    finally:
+        wedge.close()
+        good.close()
 
 
 def test_remote_worker_task_error_propagates():
