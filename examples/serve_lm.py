@@ -1,6 +1,14 @@
 """Serve a reduced LM with the slot-based continuous-batching engine.
 
     PYTHONPATH=src python examples/serve_lm.py [arch]
+
+With ``--daemon``, drive simulated traffic through the always-on tuning
+daemon instead: shape misses open background studies, recurring shapes
+serve from tuned winners with banked kernels skipped, and an injected
+kernel-cost shift exercises the drift -> re-tune path while serving
+continues (see README "Serving with always-on tuning").
+
+    PYTHONPATH=src python examples/serve_lm.py --daemon
 """
 
 import sys
@@ -9,7 +17,13 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    arch = sys.argv[1] if len(sys.argv) > 1 else "smollm-135m"
+    argv = sys.argv[1:]
+    if "--daemon" in argv:
+        argv.remove("--daemon")
+        arch = argv[0] if argv else "smollm-135m"
+        serve_main(["--arch", arch, "--daemon"])
+        return
+    arch = argv[0] if argv else "smollm-135m"
     serve_main(["--arch", arch, "--reduced", "--requests", "12",
                 "--batch", "4", "--max-new", "16", "--temperature", "0.8"])
 

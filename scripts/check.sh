@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
 # Repo gate: tier-1 tests + engine-throughput sanity + session-API smoke +
 # scheduler (fork + localhost-remote-worker) smoke + transfer smoke +
-# chaos (supervised fleet with fault injection) smoke + hypothesis
-# property-suite guard.
+# chaos (supervised fleet with fault injection) smoke + always-on tuning
+# daemon smoke + hypothesis property-suite guard.
 #
 # Usage:
 #   bash scripts/check.sh                      # all stages
@@ -10,7 +10,8 @@
 #   bash scripts/check.sh --skip-tests         # legacy: all but tests
 #   bash scripts/check.sh --out results.json   # summary path
 #
-# Stages: tests, engine, session, scheduler, transfer, chaos, hypothesis.
+# Stages: tests, engine, session, scheduler, transfer, chaos, daemon,
+# hypothesis.
 #
 # Every invocation writes a per-stage JSON summary (exit code, wall
 # seconds, measured throughput ratios where applicable) to
@@ -348,6 +349,54 @@ print(f"OK: warm run kept winner {cold.chosen.name!r}, executed "
 EOF
 }
 
+stage_daemon() {
+    # always-on tuning daemon smoke: simulated traffic over three request
+    # shapes on the reduced smollm config.  Later shapes must warm-start
+    # from the fleet store, steady-state serving must re-run ZERO banked
+    # kernels cold, and the injected kernel-cost shift must be detected
+    # and re-tuned in the background while serving continues.
+    python - <<'EOF'
+import sys
+
+from repro.serve.tuner import run_daemon_demo
+
+s = run_daemon_demo(rounds=4, drift_rounds=10)
+c, steady = s["counters"], s["steady_state_counters"]
+if c["warm_starts"] < 1:
+    print(f"FAIL: no shape warm-started from the fleet store ({c})")
+    sys.exit(1)
+if steady["cold_banked_exec"] != 0:
+    print(f"FAIL: steady-state serving re-executed "
+          f"{steady['cold_banked_exec']} banked kernel(s) cold")
+    sys.exit(1)
+bad = {k: v for k, v in s["second_tuned_serves"].items()
+       if v is None or v["executed"] != 0}
+if bad:
+    print(f"FAIL: second tuned serves ran kernels: {bad}")
+    sys.exit(1)
+if not s["drift_detected"] or s["retunes"] < 1:
+    print(f"FAIL: injected cost shift not recovered (drift="
+          f"{s['drift_detected']}, retunes={s['retunes']})")
+    sys.exit(1)
+if s["served_while_retuning"] < 1:
+    print("FAIL: serving stopped during the background re-tune")
+    sys.exit(1)
+names = {e["event"] for e in s["events"]}
+for must in ("tune_complete", "drift_detected", "retune_complete"):
+    if must not in names:
+        print(f"FAIL: no {must} event in the daemon journal ({names})")
+        sys.exit(1)
+r = s["ratios"]
+print(f"daemon OK: {s['shapes']} shapes, warm starts "
+      f"{c['warm_starts']}, hit ratio {r['hit_ratio']:.2f}, "
+      f"{s['retunes']} re-tune(s) after drift, served "
+      f"{s['served_while_retuning']} step(s) mid-re-tune")
+print(f'RATIO_JSON "hit_ratio": {r["hit_ratio"]:.3f}, '
+      f'"warm_start_ratio": {r["warm_start_ratio"]:.3f}, '
+      f'"daemon_retunes": {s["retunes"]}')
+EOF
+}
+
 stage_hypothesis() {
     # the core-stats property tests are optional-dep-guarded; if hypothesis
     # IS available they must actually run — a skip means the guard rotted.
@@ -370,10 +419,10 @@ stage_hypothesis() {
 }
 
 case "$STAGE" in
-    all)      STAGES=(tests engine session scheduler transfer chaos hypothesis) ;;
-    no-tests) STAGES=(engine session scheduler transfer chaos hypothesis) ;;
-    tests|engine|session|scheduler|transfer|chaos|hypothesis) STAGES=("$STAGE") ;;
-    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|chaos|hypothesis)" >&2
+    all)      STAGES=(tests engine session scheduler transfer chaos daemon hypothesis) ;;
+    no-tests) STAGES=(engine session scheduler transfer chaos daemon hypothesis) ;;
+    tests|engine|session|scheduler|transfer|chaos|daemon|hypothesis) STAGES=("$STAGE") ;;
+    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|chaos|daemon|hypothesis)" >&2
        exit 2 ;;
 esac
 

@@ -33,6 +33,8 @@ Pieces:
 
 from .backends import (Backend, BackendRun, DryRunBackend, Measurement,
                        SimBackend, WallClockBackend, dryrun_space)
+from .daemon import (BackgroundTuner, DaemonCheckpoint, DaemonConfig,
+                     DriftDetector, FleetStore, TuningDaemon)
 from .faults import FaultInjector, FaultPlan
 from .result import ConfigRecord, StudyResult
 from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
@@ -46,13 +48,14 @@ from .supervisor import WorkerPool, WorkerSpec
 from .transfer import StatisticsBank
 
 __all__ = [
-    "AutotuneSession", "Backend", "BackendRun", "ConfigPoint",
-    "ConfigRecord", "DryRunBackend", "Executor", "FaultInjector",
-    "FaultPlan", "ForkExecutor", "InProcessExecutor", "Measurement",
-    "RESET_POLICY", "RemoteExecutor", "SEARCHES", "Scheduler",
-    "SchedulerError", "SearchSpace", "SimBackend", "StatisticsBank",
-    "StudyResult", "Task", "WallClockBackend", "WorkerPool", "WorkerSpec",
-    "dryrun_space", "dumps_canonical", "exhaustive", "fork_available",
-    "from_jsonable", "measure_config", "racing", "run_payload",
-    "to_jsonable",
+    "AutotuneSession", "Backend", "BackendRun", "BackgroundTuner",
+    "ConfigPoint", "ConfigRecord", "DaemonCheckpoint", "DaemonConfig",
+    "DriftDetector", "DryRunBackend", "Executor", "FaultInjector",
+    "FaultPlan", "FleetStore", "ForkExecutor", "InProcessExecutor",
+    "Measurement", "RESET_POLICY", "RemoteExecutor", "SEARCHES",
+    "Scheduler", "SchedulerError", "SearchSpace", "SimBackend",
+    "StatisticsBank", "StudyResult", "Task", "TuningDaemon",
+    "WallClockBackend", "WorkerPool", "WorkerSpec", "dryrun_space",
+    "dumps_canonical", "exhaustive", "fork_available", "from_jsonable",
+    "measure_config", "racing", "run_payload", "to_jsonable",
 ]

@@ -43,6 +43,7 @@ from __future__ import annotations
 import json
 import math
 import os
+import tempfile
 import zlib
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -165,6 +166,36 @@ class StatisticsBank:
         return StatisticsBank(
             out, meta=self.meta + [{"discount": factor}])
 
+    # -- evidence age (fleet-store support) ----------------------------------
+
+    def stamp(self, now: float, *, only_unstamped: bool = True) -> None:
+        """Stamp entries with ``now`` as their evidence time (in place).
+        By default only unstamped entries are touched, so merging a freshly
+        harvested bank then stamping records *when the fleet learned it*
+        without rejuvenating older evidence."""
+        for st in self.entries.values():
+            if st.last_updated is None or not only_unstamped:
+                st.last_updated = now
+
+    def discount_by_age(self, now: float, half_life: float, *,
+                        ttl: Optional[float] = None) -> "StatisticsBank":
+        """Wall-clock decay view of the bank (new bank; source untouched):
+        each stamped entry keeps its mean/variance but halves its evidence
+        every ``half_life`` seconds of age (``KernelStats.discount_by_age``),
+        and entries older than ``ttl`` seconds — or decayed to zero samples
+        — are dropped outright.  Unstamped entries never age."""
+        out: Dict[str, KernelStats] = {}
+        for k, st in self.entries.items():
+            if ttl is not None and st.last_updated is not None \
+                    and now - st.last_updated > ttl:
+                continue
+            d = st.discount_by_age(now, half_life)
+            if d.n > 0:
+                out[k] = d
+        return StatisticsBank(
+            out, meta=self.meta + [{"age_discount": {
+                "now": now, "half_life": half_life, "ttl": ttl}}])
+
     def filtered(self, *, max_cv: float,
                  min_samples: int = 2) -> "StatisticsBank":
         """Per-key quality filter: drop entries whose coefficient of
@@ -282,10 +313,25 @@ class StatisticsBank:
                    meta=list(d.get("meta", [])))
 
     def save(self, path: str) -> None:
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.to_json(), f, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        """Durably replace ``path`` with this bank: write to a same-
+        directory mkstemp file, fsync, then atomically rename — a crash at
+        any point leaves either the old bank or the new one, never a
+        truncated hybrid (the daemon persists the fleet bank on a timer)."""
+        d = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(
+            prefix=os.path.basename(path) + ".", suffix=".tmp", dir=d)
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.to_json(), f, indent=1, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
 
     @classmethod
     def load(cls, path: str) -> "StatisticsBank":

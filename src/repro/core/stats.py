@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Optional
 
 # 95% two-sided normal quantile. The paper constructs 95% confidence
 # intervals from the scaled sample variance; for very small n we widen via a
@@ -56,6 +57,12 @@ class KernelStats:
     total: float = 0.0
     min_t: float = math.inf
     max_t: float = 0.0
+    #: wall-clock time (time.time()) the evidence was last refreshed, or
+    #: None for unstamped records (every pre-daemon bank).  Carried through
+    #: copy/merge/discount and the JSON round-trip, but excluded from
+    #: equality and OMITTED from JSON when unset so stamped-free banks
+    #: serialize (and fingerprint) exactly as before.
+    last_updated: "Optional[float]" = field(default=None, compare=False)
     # -- engine-hot-path caches (all keyed on n, which strictly increases on
     # every update/merge, so a stale cache is detected by n alone) ----------
     # t-quantile x std / sqrt(n) factor, valid while _hw_n == n
@@ -117,6 +124,10 @@ class KernelStats:
         across channels (aggregate_statistics in Figure 2)."""
         if other.n == 0:
             return
+        if other.last_updated is not None and (
+                self.last_updated is None
+                or other.last_updated > self.last_updated):
+            self.last_updated = other.last_updated
         if self.n == 0:
             self.n = other.n
             self.mean = other.mean
@@ -195,7 +206,7 @@ class KernelStats:
 
     def copy(self) -> "KernelStats":
         return KernelStats(self.n, self.mean, self.m2, self.total,
-                           self.min_t, self.max_t)
+                           self.min_t, self.max_t, self.last_updated)
 
     # -- transfer / serialization -------------------------------------------
     #
@@ -211,14 +222,18 @@ class KernelStats:
         if self.n > 0:          # min_t is +inf until the first sample
             d["min"] = float(self.min_t)
             d["max"] = float(self.max_t)
+        if self.last_updated is not None:
+            d["last_updated"] = float(self.last_updated)
         return d
 
     @classmethod
     def from_json(cls, d: dict) -> "KernelStats":
         n = int(d["n"])
+        lu = d.get("last_updated")
         return cls(n, float(d["mean"]), float(d["m2"]), float(d["total"]),
                    float(d["min"]) if n > 0 else math.inf,
-                   float(d["max"]) if n > 0 else 0.0)
+                   float(d["max"]) if n > 0 else 0.0,
+                   float(lu) if lu is not None else None)
 
     @classmethod
     def from_moments(cls, n: int, mean: float, variance: float,
@@ -243,11 +258,29 @@ class KernelStats:
         evidence (n = 0)."""
         if factor >= 1.0:
             return self.copy()
-        n = int(self.n * factor)
+        # round, don't truncate: an age discount epsilon under 1.0 must
+        # not destroy a whole sample of evidence (n=2 -> 1 would knock a
+        # freshly banked kernel back below min_samples)
+        n = int(round(self.n * factor))
         if n <= 0:
             return KernelStats()
-        return KernelStats.from_moments(n, self.mean, self.variance,
-                                        self.min_t, self.max_t)
+        out = KernelStats.from_moments(n, self.mean, self.variance,
+                                       self.min_t, self.max_t)
+        out.last_updated = self.last_updated
+        return out
+
+    def discount_by_age(self, now: float, half_life: float
+                        ) -> "KernelStats":
+        """Age-aware ``discounted``: evidence decays exponentially in wall
+        clock, halving every ``half_life`` seconds since ``last_updated``.
+        Unstamped records (no ``last_updated``) carry no age and pass
+        through as plain copies — a pre-daemon bank is trusted as-is."""
+        if self.last_updated is None:
+            return self.copy()
+        age = now - self.last_updated
+        if age <= 0.0:
+            return self.copy()
+        return self.discounted(0.5 ** (age / half_life))
 
     def minus(self, prior: "KernelStats") -> "Optional[KernelStats]":
         """Approximate inverse of ``merge``: the sufficient statistics of
@@ -265,7 +298,8 @@ class KernelStats:
         m2 = self.m2 - prior.m2 - d * d * prior.n * nd / self.n
         if m2 < 0.0:                   # float cancellation guard
             m2 = 0.0
-        return KernelStats(nd, mean, m2, total, self.min_t, self.max_t)
+        return KernelStats(nd, mean, m2, total, self.min_t, self.max_t,
+                           self.last_updated)
 
     def scaled(self, a: float) -> "KernelStats":
         """The statistics of ``a * X`` — the affine (through-origin) image
@@ -274,4 +308,5 @@ class KernelStats:
         if self.n == 0:
             return KernelStats()
         return KernelStats(self.n, a * self.mean, a * a * self.m2,
-                           a * self.total, a * self.min_t, a * self.max_t)
+                           a * self.total, a * self.min_t, a * self.max_t,
+                           self.last_updated)

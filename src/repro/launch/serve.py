@@ -5,6 +5,12 @@
 
 Spins up the slot-based engine on a (reduced) model with random weights and
 replays a batch of synthetic prompts, reporting aggregate decode throughput.
+
+With ``--daemon``, instead drives simulated traffic through the always-on
+tuning daemon (``repro.serve.tuner.run_daemon_demo``): shape misses open
+background studies, later shapes warm-start from the fleet store, and an
+injected kernel-cost shift exercises the drift -> re-tune path without
+serving ever stopping.
 """
 
 from __future__ import annotations
@@ -30,7 +36,18 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--daemon", action="store_true",
+                    help="run the always-on tuning daemon demo instead")
+    ap.add_argument("--rounds", type=int, default=4,
+                    help="steady-state serving rounds (daemon demo)")
+    ap.add_argument("--bank", default=None,
+                    help="save the fleet statistics bank here (daemon demo)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="daemon checkpoint path (daemon demo)")
     args = ap.parse_args(argv)
+
+    if args.daemon:
+        return _daemon_demo(args)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg, ModelKnobs(kv_chunk=32, ssm_chunk=16))
@@ -57,6 +74,22 @@ def main(argv=None):
     for uid in sorted(eng.results)[:4]:
         print(f"  req {uid}: {eng.results[uid].tokens[:12]} ...")
     return eng.results
+
+
+def _daemon_demo(args) -> dict:
+    from repro.serve.tuner import run_daemon_demo
+
+    summary = run_daemon_demo(
+        args.arch, rounds=args.rounds, checkpoint=args.checkpoint,
+        bank_path=args.bank, log=print)
+    r = summary["ratios"]
+    print(f"hit ratio {r['hit_ratio']:.2f}, warm-start ratio "
+          f"{r['warm_start_ratio']:.2f}, drift detected: "
+          f"{summary['drift_detected']}, re-tunes: {summary['retunes']}, "
+          f"served while re-tuning: {summary['served_while_retuning']}")
+    for key, info in summary["second_tuned_serves"].items():
+        print(f"  2nd tuned serve {key}: {info}")
+    return summary
 
 
 if __name__ == "__main__":

@@ -1,5 +1,9 @@
-"""serve — KV-cache serving engine (prefill + decode, batched)."""
+"""serve — KV-cache serving engine (prefill + decode, batched) and the
+always-on tuning daemon binding (``repro.serve.tuner``)."""
 
-from .engine import ServeConfig, Engine
+from .engine import Engine, ServeConfig, bucket_length
+from .tuner import (LMShapeProvider, ServingTuner, VirtualClock,
+                    run_daemon_demo, shape_key)
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = ["Engine", "LMShapeProvider", "ServeConfig", "ServingTuner",
+           "VirtualClock", "bucket_length", "run_daemon_demo", "shape_key"]

@@ -27,6 +27,20 @@ from repro.models.model import Model, ModelKnobs
 from repro.parallel.sharding import ShardingRules, axis_rules
 
 
+def bucket_length(n: int, buckets: Sequence[int]) -> int:
+    """Pad length ``n`` up to the smallest bucket that holds it (the last
+    bucket when none does; ``n`` itself with no buckets).  THE bucketing
+    function: the engine's prompt padding and the tuning daemon's shape
+    keys both go through here, so a request can never be padded to one
+    sequence length and tuned at another."""
+    if not buckets:
+        return n
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
 @dataclass
 class ServeConfig:
     batch_size: int = 8
@@ -103,12 +117,7 @@ class Engine:
         self.results[req.uid] = Result(req.uid)
 
     def _bucket(self, n):
-        if not self.sc.prompt_buckets:
-            return n
-        for b in self.sc.prompt_buckets:
-            if n <= b:
-                return b
-        return self.sc.prompt_buckets[-1]
+        return bucket_length(n, self.sc.prompt_buckets)
 
     def _admit(self):
         """Fill free slots from the queue (prefill + cache splice)."""

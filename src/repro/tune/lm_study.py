@@ -261,16 +261,18 @@ class LMStudy:
     def session(self, *, policy: str = "conditional",
                 tolerance: float = 0.25, search: str = "exhaustive",
                 max_configs: Optional[int] = None, trials: int = 3,
-                prior=None, **kw):
+                prior=None, clock=None, **kw):
         """The supported front-end over this study: an ``AutotuneSession``
         measuring StepKnobs points with ``WallClockBackend`` bound to
         ``kernels_of``.  Sweeps run through ``repro.api.scheduler`` like
         every other study (serially — wall-clock backends are not
         ``parallel_safe``); ``search="racing"`` races configurations by
-        real wall clock (see ``race``)."""
+        real wall clock (see ``race``).  ``clock`` overrides the backend's
+        time source (deterministic tests, daemon parity checks)."""
         from repro.api import AutotuneSession, WallClockBackend
         return AutotuneSession(self.search_space(max_configs),
-                               backend=WallClockBackend(self.kernels_of),
+                               backend=WallClockBackend(self.kernels_of,
+                                                        clock=clock),
                                policy=policy, tolerance=tolerance,
                                search=search, trials=trials, prior=prior,
                                **kw)

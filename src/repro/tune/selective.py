@@ -99,12 +99,17 @@ class SelectiveTimer:
                                      self.policy.min_samples)
 
     def time_kernel(self, sig: Signature, thunk: Callable[[], None],
-                    freq: int = 1) -> float:
+                    freq: int = 1, *, force: bool = False) -> float:
         """Run (or skip) one kernel occurrence; returns the time charged to
         the configuration's predicted cost.  ``freq`` is the kernel's
-        occurrence count along the step (the paper's alpha)."""
+        occurrence count along the step (the paper's alpha).
+
+        ``force=True`` executes and measures even a confident (or globally
+        switched-off) kernel — shadow mode: the serving daemon's drift
+        detector periodically forces a real sample so live evidence keeps
+        flowing after the skip regime is reached."""
         st = self._stats(sig)
-        if self._should_execute(sig, freq):
+        if force or self._should_execute(sig, freq):
             t0 = self.clock()
             thunk()
             t = self.clock() - t0
