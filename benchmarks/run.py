@@ -5,7 +5,8 @@ Sections:
   2. beyond-paper: racing + extrapolation
   3. LM autotune (the technique on our framework, measured)
   4. cold-vs-warm statistics transfer on Capital (bench_transfer)
-  5. roofline table from the dry-run artifacts (if present)
+  5. model-guided search: coverage vs winner quality (bench_search)
+  6. roofline table from the dry-run artifacts (if present)
 
 ``--full`` widens epsilon sweeps and architectures.  ``--paper`` adds the
 paper-scale sweep (real processor counts, checkpointed + process-parallel
@@ -40,7 +41,7 @@ def main(argv=None):
                          "the sweep")
     ap.add_argument("--sections", nargs="*",
                     default=["case", "beyond", "lm", "transfer",
-                             "roofline"])
+                             "search", "roofline"])
     args = ap.parse_args(argv)
     fast = not args.full
     workers = args.workers if args.workers is not None \
@@ -62,6 +63,9 @@ def main(argv=None):
     if "transfer" in args.sections:
         from . import bench_transfer
         bench_transfer.run(trials=2 if fast else 3)
+    if "search" in args.sections:
+        from . import bench_search
+        bench_search.run(top_ks=[1, 2, 4] if fast else [1, 2, 4, 8])
     if "roofline" in args.sections:
         try:
             from . import roofline

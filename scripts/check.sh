@@ -2,7 +2,8 @@
 # Repo gate: tier-1 tests + engine-throughput sanity + session-API smoke +
 # scheduler (fork + localhost-remote-worker) smoke + transfer smoke +
 # chaos (supervised fleet with fault injection) smoke + always-on tuning
-# daemon smoke + hypothesis property-suite guard.
+# daemon smoke + model-guided search gate (<10% grid coverage, exhaustive
+# winner) + hypothesis property-suite guard.
 #
 # Usage:
 #   bash scripts/check.sh                      # all stages
@@ -11,7 +12,7 @@
 #   bash scripts/check.sh --out results.json   # summary path
 #
 # Stages: tests, engine, session, scheduler, transfer, chaos, daemon,
-# hypothesis.
+# search, hypothesis.
 #
 # Every invocation writes a per-stage JSON summary (exit code, wall
 # seconds, measured throughput ratios where applicable) to
@@ -397,17 +398,69 @@ print(f'RATIO_JSON "hit_ratio": {r["hit_ratio"]:.3f}, '
 EOF
 }
 
+stage_search() {
+    # model-guided driver gate, the PR-8 acceptance numbers: on the
+    # committed Capital ci grid the copula sampler + roofline prefilter
+    # must land the exhaustive winner at optimum quality >= 0.99 while
+    # measuring < 10% of the grid.
+    python - <<'EOF'
+import sys
+
+from repro.api import AutotuneSession, SimBackend, StatisticsBank
+from repro.linalg.studies import search_space
+
+space = search_space("capital-cholesky", scale="ci")
+bank = StatisticsBank.load(
+    "benchmarks/results/capital-cholesky-ci_stats_bank.json")
+
+def session(**kw):
+    return AutotuneSession(space, backend=SimBackend(), policy="eager",
+                           tolerance=0.25, trials=2, **kw)
+
+full = session(search="exhaustive").run()
+times = {r.name: r.predicted for r in full.records}
+guided = session(search="model_guided",
+                 search_options={"banks": [bank], "seed": 0}).run()
+cov = guided.extra["coverage"]
+winner = guided.extra["best"]
+if cov >= 0.10:
+    print(f"FAIL: model_guided measured {cov:.1%} of the grid (>= 10%)")
+    sys.exit(1)
+if winner is None or winner not in times:
+    print(f"FAIL: model_guided produced no rankable winner ({winner!r})")
+    sys.exit(1)
+quality = min(times.values()) / times[winner]
+if winner != full.chosen.name:
+    print(f"FAIL: model_guided chose {winner!r}, exhaustive chose "
+          f"{full.chosen.name!r} (quality {quality:.3f})")
+    sys.exit(1)
+if quality < 0.99:
+    print(f"FAIL: winner quality {quality:.3f} < 0.99")
+    sys.exit(1)
+s = guided.extra["sampler"]
+print(f"search OK: winner {winner!r} == exhaustive, coverage {cov:.1%} "
+      f"({len(guided.extra['dispatched'])}/{len(space)} points), "
+      f"quality {quality:.3f}, rho={s['rho']:.2f}, "
+      f"{s['model_keys']} model keys")
+print(f'RATIO_JSON "search_coverage": {cov:.4f}, '
+      f'"winner_quality": {quality:.4f}, '
+      f'"search_dispatched": {len(guided.extra["dispatched"])}')
+EOF
+}
+
 stage_hypothesis() {
-    # the core-stats property tests are optional-dep-guarded; if hypothesis
-    # IS available they must actually run — a skip means the guard rotted.
+    # the core-stats and copula property tests are optional-dep-guarded;
+    # if hypothesis IS available they must actually run — a skip means
+    # the guard rotted.
     if python -c "import hypothesis" 2>/dev/null; then
         local out
-        out=$(python -m pytest tests/test_core_stats.py -q -rs) || {
+        out=$(python -m pytest tests/test_core_stats.py \
+                  tests/test_transfer.py -q -rs) || {
             echo "$out"; return 1; }
         echo "$out" | tail -n 3
         if printf '%s' "$out" | grep -qi "skipped"; then
-            echo "FAIL: hypothesis is installed but the core-stats property"
-            echo "      suite skipped tests anyway:"
+            echo "FAIL: hypothesis is installed but the property"
+            echo "      suites skipped tests anyway:"
             printf '%s\n' "$out" | grep -i skip
             return 1
         fi
@@ -419,10 +472,10 @@ stage_hypothesis() {
 }
 
 case "$STAGE" in
-    all)      STAGES=(tests engine session scheduler transfer chaos daemon hypothesis) ;;
-    no-tests) STAGES=(engine session scheduler transfer chaos daemon hypothesis) ;;
-    tests|engine|session|scheduler|transfer|chaos|daemon|hypothesis) STAGES=("$STAGE") ;;
-    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|chaos|daemon|hypothesis)" >&2
+    all)      STAGES=(tests engine session scheduler transfer chaos daemon search hypothesis) ;;
+    no-tests) STAGES=(engine session scheduler transfer chaos daemon search hypothesis) ;;
+    tests|engine|session|scheduler|transfer|chaos|daemon|search|hypothesis) STAGES=("$STAGE") ;;
+    *) echo "unknown stage: $STAGE (tests|engine|session|scheduler|transfer|chaos|daemon|search|hypothesis)" >&2
        exit 2 ;;
 esac
 

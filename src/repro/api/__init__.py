@@ -40,16 +40,18 @@ from .result import ConfigRecord, StudyResult
 from .scheduler import (Executor, ForkExecutor, InProcessExecutor,
                         RemoteExecutor, Scheduler, SchedulerError, Task,
                         fork_available)
-from .search import SEARCHES, exhaustive, measure_config, racing
+from .search import (SEARCHES, exhaustive, measure_config, model_guided,
+                     racing)
 from .serialize import dumps_canonical, from_jsonable, to_jsonable
 from .session import AutotuneSession, run_payload
 from .space import RESET_POLICY, ConfigPoint, SearchSpace
 from .supervisor import WorkerPool, WorkerSpec
-from .transfer import StatisticsBank
+from .transfer import CopulaModel, StatisticsBank
 
 __all__ = [
     "AutotuneSession", "Backend", "BackendRun", "BackgroundTuner",
-    "ConfigPoint", "ConfigRecord", "DaemonCheckpoint", "DaemonConfig",
+    "ConfigPoint", "ConfigRecord", "CopulaModel", "DaemonCheckpoint",
+    "DaemonConfig",
     "DriftDetector", "DryRunBackend", "Executor", "FaultInjector",
     "FaultPlan", "FleetStore", "ForkExecutor", "InProcessExecutor",
     "Measurement", "RESET_POLICY", "RemoteExecutor", "SEARCHES",
@@ -57,5 +59,6 @@ __all__ = [
     "StatisticsBank", "StudyResult", "Task", "TuningDaemon",
     "WallClockBackend", "WorkerPool", "WorkerSpec", "dryrun_space",
     "dumps_canonical", "exhaustive", "fork_available", "from_jsonable",
-    "measure_config", "racing", "run_payload", "to_jsonable",
+    "measure_config", "model_guided", "racing", "run_payload",
+    "to_jsonable",
 ]

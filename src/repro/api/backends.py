@@ -39,6 +39,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.policies import Policy
 
 from .space import ConfigPoint, SearchSpace
@@ -99,6 +101,26 @@ class BackendRun:
 
     def run_trial(self, point: ConfigPoint) -> Measurement:
         raise NotImplementedError
+
+    # -- model-guided search hooks (repro.api.search.model_guided) -----------
+
+    def kernel_profile(self, point: ConfigPoint) -> Optional[Dict]:
+        """Structural kernel-occurrence profile of one configuration:
+        ``{structural_key: per-rank occurrence counts}``, obtained WITHOUT
+        consuming measurement state (the sim backend uses the RNG-free
+        recording pass), so profiling every candidate leaves the run
+        bit-identical to one that never profiled.  ``None`` when the
+        backend cannot see kernel structure — the model-guided driver then
+        falls back to uniform candidate sampling."""
+        return None
+
+    def cost_lower_bound(self, point: ConfigPoint) -> Optional[float]:
+        """Analytic lower bound on the configuration's step time (roofline:
+        no schedule can beat its compute at peak flops / memory
+        bandwidth), used to prune provably-dominated candidates before any
+        dispatch.  ``None`` when no machine model is available — nothing
+        is pruned."""
+        return None
 
 
 class Backend:
@@ -188,11 +210,19 @@ class SimRun(BackendRun):
         # transfer harvest: measured statistics accumulated across model
         # resets, prior-deduplicated (see transfer.Harvest)
         self._harvest = Harvest(self.world.size, prior)
+        cm = cost_model
         if timer is None:
-            cm = cost_model or CostModel(
-                machine or space.machine or KNL_STAMPEDE2,
-                allocation=allocation, seed=seed)
+            if cm is None:
+                cm = CostModel(machine or space.machine or KNL_STAMPEDE2,
+                               allocation=allocation, seed=seed)
             timer = cm.sample
+        elif cm is None:
+            # a bound CostModel.sample still reveals its machine spec; a
+            # fully opaque timer leaves no spec and cost_lower_bound then
+            # declines to prune
+            owner = getattr(timer, "__self__", None)
+            cm = owner if isinstance(owner, CostModel) else None
+        self._spec = cm.spec if cm is not None else None
         self.runtime = Runtime(self.world, self.critter, timer,
                                seed=seed + 17 * allocation,
                                overhead=overhead)
@@ -201,6 +231,8 @@ class SimRun(BackendRun):
         # by the payload callable (not the point name) so an ad-hoc point
         # that reuses a study point's name still measures its own program.
         self._progs: Dict[Any, Any] = {}
+        # structural profiles per payload (see _structure)
+        self._structures: Dict[Any, tuple] = {}
 
     def _prog(self, point: ConfigPoint):
         prog = self._progs.get(point.payload)
@@ -246,6 +278,81 @@ class SimRun(BackendRun):
 
     def run_trial(self, point: ConfigPoint) -> Measurement:
         return self._measure(self.runtime.run(self._prog(point)))
+
+    # -- model-guided search hooks -------------------------------------------
+
+    def _structure(self, point: ConfigPoint) -> tuple:
+        """Structural profile of one configuration via the RNG-free
+        recording pass (``Runtime._record`` matches communication without
+        touching the Critter protocol or the sampling RNG, so profiling
+        any number of candidates leaves measurement state bit-identical):
+        per-structural-key per-rank occurrence counts, plus per-rank
+        computation flop/byte totals for the roofline bound.  Collectives
+        are charged to every participant rank, point-to-points (including
+        matched isends) to both endpoints — the per-rank attribution that
+        makes ``max`` over ranks a critical-path surrogate."""
+        got = self._structures.get(point.payload)
+        if got is not None:
+            return got
+        from repro.core.signatures import (bytes_of, flops_of,
+                                           structural_key)
+        from repro.simmpi.runtime import (EV_COLL, EV_COMP, EV_IMATCH,
+                                          EV_P2P)
+        w = self.world.size
+        sigs = self.world.interner.sigs
+        keys: Dict[int, str] = {}
+        counts: Dict[str, np.ndarray] = {}
+        flops = np.zeros(w)
+        nbytes = np.zeros(w)
+
+        def key_of(sid):
+            key = keys.get(sid)
+            if key is None:
+                key = keys[sid] = structural_key(sigs[sid], w)
+            return key
+
+        def bump(key, ranks):
+            arr = counts.get(key)
+            if arr is None:
+                arr = counts[key] = np.zeros(w)
+            arr[ranks] += 1.0
+
+        for ev in self.runtime._record(self._prog(point)):
+            kind = ev[0]
+            if kind == EV_COMP:
+                _, r, sid = ev
+                bump(key_of(sid), r)
+                sig = sigs[sid]
+                flops[r] += flops_of(sig)
+                nbytes[r] += bytes_of(sig)
+            elif kind == EV_COLL:
+                _, sid, comm = ev
+                bump(key_of(sid), comm.ranks_np)
+            elif kind == EV_P2P:
+                _, src, dst, sid = ev
+                key = key_of(sid)
+                bump(key, src)
+                bump(key, dst)
+            elif kind == EV_IMATCH:
+                key = key_of(ev[3])
+                bump(key, ev[1])
+                bump(key, ev[2])
+        got = (counts, flops, nbytes)
+        self._structures[point.payload] = got
+        return got
+
+    def kernel_profile(self, point: ConfigPoint) -> Dict[str, np.ndarray]:
+        return self._structure(point)[0]
+
+    def cost_lower_bound(self, point: ConfigPoint) -> Optional[float]:
+        if self._spec is None:
+            return None
+        _, flops, nbytes = self._structure(point)
+        per_rank = np.maximum(flops / self._spec.peak_flops,
+                              nbytes / self._spec.mem_bw)
+        # computation-only: communication at any bandwidth only adds time,
+        # so the slowest rank's roofline is a valid lower bound
+        return float(per_rank.max()) if per_rank.size else 0.0
 
 
 # --------------------------------------------------------------- wall clock
@@ -395,6 +502,15 @@ class DryRunRun(BackendRun):
 
     def run_trial(self, point: ConfigPoint) -> Measurement:
         return self._measure(self._evaluate(point))
+
+    def cost_lower_bound(self, point: ConfigPoint) -> float:
+        """The dry-run roofline IS an analytic lower bound: the lowered
+        HLO's dominant roofline term at peak rates.  A lowering failure is
+        ``+inf`` — dominated by any measured incumbent."""
+        rec = self._evaluate(point)
+        if "error" in rec:
+            return float("inf")
+        return float(rec["roofline"]["step_s"])
 
 
 def dryrun_space(arch: str, shape: str, points) -> SearchSpace:

@@ -61,6 +61,7 @@ import json
 import os
 import tempfile
 import time
+import zlib
 from dataclasses import asdict, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -74,7 +75,8 @@ from .scheduler import (FAILED, Executor, ForkExecutor, InProcessExecutor,
 from .serialize import dumps_canonical
 from .space import SearchSpace
 
-_DRIVERS = {"exhaustive": _search.exhaustive, "racing": _search.racing}
+_DRIVERS = {"exhaustive": _search.exhaustive, "racing": _search.racing,
+            "model_guided": _search.model_guided}
 
 #: sentinel distinguishing "use the session default" from an explicit None
 _UNSET = object()
@@ -102,7 +104,10 @@ class AutotuneSession:
         self.trials = trials
         self.seed = seed
         self.allocation = allocation
-        self.search_options = dict(search_options or {})
+        # JSON-normalized once, here, so scheduler task payloads ship the
+        # options verbatim (model-guided banks/models become their JSON)
+        self.search_options = _search.normalize_options(
+            search, dict(search_options or {}))
         # cross-study transfer: the per-key quality filter and the discount
         # are applied once, here, so the checkpoint fingerprint below
         # reflects the evidence actually seeded; an empty (or None) prior
@@ -156,6 +161,13 @@ class AutotuneSession:
                "tolerance": pol.tolerance, "trials": self.trials,
                "search": self.search, "seed": seed,
                "allocation": allocation}
+        if self.search_options:
+            # driver options change what a study measures (racing rounds,
+            # model-guided banks/seed/coverage): journaled results must
+            # never be replayed across different options.  Fingerprinted —
+            # a bank in the options would otherwise bloat every key.
+            key["search_options"] = "opts:%08x" % zlib.crc32(
+                dumps_canonical(self.search_options).encode())
         # only non-default transfer settings enter the key, so existing
         # cold checkpoints keep resolving under their original identity
         if shared:
@@ -204,6 +216,24 @@ class AutotuneSession:
             opts["start_records"] = start
             opts["on_record"] = lambda rec: checkpoint.add_record(
                 key, rec, run.carry_state())
+        if self.search == "model_guided":
+            if prior is not None and "banks" not in opts \
+                    and "model" not in opts:
+                # the seeded prior doubles as the candidate model unless
+                # the caller supplied explicit banks — mid-sweep shared
+                # statistics thereby sharpen later tasks' samplers, not
+                # just their skip regimes
+                opts["banks"] = [prior.to_json()]
+            if checkpoint is not None and not shared:
+                # the candidate selection (survivor set + post-selection
+                # sampler RNG) is journaled so a killed-and-resumed study
+                # re-races the same survivors without re-consuming sampler
+                # draws — bit-identical to the uninterrupted driver
+                st = checkpoint.search_state(key)
+                if st is not None:
+                    opts["start_state"] = st
+                opts["on_state"] = \
+                    lambda s: checkpoint.add_search_state(key, s)
         records, extra = driver(run, self.space, pol, trials=self.trials,
                                 **opts)
         if collect and not start:
@@ -273,7 +303,8 @@ class AutotuneSession:
               deterministic: bool = False,
               max_retries: int = 0,
               retry_backoff: float = 0.25,
-              on_failure: str = "raise") -> List[StudyResult]:
+              on_failure: str = "raise",
+              driver: Optional[str] = None) -> List[StudyResult]:
         """The paper's measurement grid (§VI.A): one independent study per
         (policy, tolerance, seed, allocation), scheduled as tasks on an
         executor (``workers`` forks; pass ``executor=`` for remote
@@ -285,6 +316,14 @@ class AutotuneSession:
         boundaries (tasks only warm-start from banks a *previous*
         invocation persisted to the checkpoint), keeping each invocation
         bit-identical to the serial driver under the same seed bank.
+
+        ``driver`` overrides the session's search for this sweep only
+        (``sweep(driver="model_guided")``): sampled-candidate sweeps ride
+        the same checkpointing, mid-sweep statistics sharing, and
+        fork/remote executors as exhaustive ones — the sampler seed ships
+        in each task payload and its post-selection RNG state is journaled
+        with the study, so killed-and-resumed or fork-dispatched sweeps
+        stay bit-identical to the serial driver.
 
         Failure semantics (fleet sweeps): a failed sweep point (worker
         death, task deadline, task exception) is retried up to
@@ -303,6 +342,28 @@ class AutotuneSession:
         that needed retries carries them in
         ``StudyResult.extra["recovery"]``, so downstream drift analysis
         can attribute anomalies to infrastructure."""
+        if driver is not None and driver != self.search:
+            # sweep-scoped search override (sweep(driver="model_guided")):
+            # the study key and task payloads both read self.search, so
+            # rebind it (and re-normalize options for the new driver) for
+            # the duration of this sweep only
+            if driver not in _DRIVERS:
+                raise ValueError(f"unknown search {driver!r}; "
+                                 f"want one of {tuple(_DRIVERS)}")
+            prev, prev_opts = self.search, self.search_options
+            self.search = driver
+            self.search_options = _search.normalize_options(
+                driver, dict(prev_opts))
+            try:
+                return self.sweep(
+                    policies=policies, tolerances=tolerances, seeds=seeds,
+                    allocations=allocations, workers=workers,
+                    checkpoint=checkpoint, executor=executor,
+                    share_stats=share_stats, deterministic=deterministic,
+                    max_retries=max_retries, retry_backoff=retry_backoff,
+                    on_failure=on_failure)
+            finally:
+                self.search, self.search_options = prev, prev_opts
         policies = list(policies) if policies is not None \
             else [self._base_policy.name]
         tolerances = list(tolerances) if tolerances is not None \
@@ -484,9 +545,13 @@ class _Checkpoint:
     One file holds a dict keyed by the study key's canonical JSON:
     ``{"results": {key: result_json},
        "records": {key: {"recs": [record_json], "carry": state}},
+       "search_state": {key: selection_json},
        "shared_bank": bank_json,
        "failures": {key: {"attempts": [...]}},
-       "events": [event, ...]}`` — ``shared_bank`` is the accumulated
+       "events": [event, ...]}`` — ``search_state`` is a model-guided
+    study's journaled candidate selection (survivor set, roofline prunes,
+    post-selection sampler RNG state, space order fingerprint), cleared
+    when the study's result lands; ``shared_bank`` is the accumulated
     mid-sweep statistics bank of ``share_stats`` sweeps, so a resumed
     sweep restores the shared prior its killed predecessor had earned;
     ``failures`` are sweep points whose retries were exhausted under
@@ -544,6 +609,7 @@ class _Checkpoint:
         k = self._k(key)
         self._data["results"][k] = result.to_json()
         self._data["records"].pop(k, None)   # subsumed by the full result
+        self._data.get("search_state", {}).pop(k, None)
         # a completed re-attempt supersedes a journaled failure
         self._data.get("failures", {}).pop(k, None)
         self._flush()
@@ -583,6 +649,16 @@ class _Checkpoint:
             self._k(key), {"recs": [], "carry": None})
         entry["recs"].append(record.to_json())
         entry["carry"] = carry
+        self._flush()
+
+    def search_state(self, key: dict) -> Optional[dict]:
+        """The journaled model-guided candidate selection (survivor set +
+        post-selection sampler RNG + space order fingerprint), or
+        ``None``.  Cleared when the study's full result lands."""
+        return self._data.get("search_state", {}).get(self._k(key))
+
+    def add_search_state(self, key: dict, state: dict) -> None:
+        self._data.setdefault("search_state", {})[self._k(key)] = state
         self._flush()
 
     def shared_bank(self):

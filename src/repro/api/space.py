@@ -15,6 +15,7 @@ payloads: ``repro.linalg.studies.search_space`` (sim),
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field, replace
 from typing import Any, Iterator, List, Optional
 
@@ -48,11 +49,37 @@ class SearchSpace:
     world_size: int = 0
     machine: Any = None
 
+    def __post_init__(self):
+        # The points list IS the enumeration contract: checkpoints journal
+        # per-configuration records by position, and the model-guided
+        # driver selects candidates by sampled index — both replayed
+        # across processes and resume boundaries.  Enumeration order is
+        # therefore pinned to construction order (list order; never
+        # re-sorted), and names must be unambiguous since records and
+        # journal entries key on them.
+        seen = set()
+        for p in self.points:
+            if p.name in seen:
+                raise ValueError(
+                    f"space {self.name!r} enumerates point {p.name!r} "
+                    "twice; point names key records and checkpoint "
+                    "journal entries and must be unique")
+            seen.add(p.name)
+
     def __iter__(self) -> Iterator[ConfigPoint]:
         return iter(self.points)
 
     def __len__(self) -> int:
         return len(self.points)
+
+    def order_fingerprint(self) -> str:
+        """Stable identity of the point enumeration *order* (crc over the
+        name sequence — process-independent by construction).  Journaled
+        with the model-guided sampler state; resume refuses to map a
+        checkpointed candidate selection onto a space that enumerates
+        differently."""
+        names = "\x1f".join(p.name for p in self.points)
+        return f"order:{zlib.crc32(names.encode()):08x}:{len(self.points)}"
 
     def subset(self, n: Optional[int]) -> "SearchSpace":
         """First-n-points view (same substrate), for fast CI passes."""

@@ -36,6 +36,12 @@ Trust control:
 Banks merge (``StatisticsBank.merge``), round-trip losslessly through
 JSON (``to_json``/``from_json``, ``save``/``load``), and fingerprint into
 session checkpoint keys so warm results are never replayed as cold ones.
+
+``CopulaModel`` turns the same quantile machinery generative: per-kernel
+Gaussian marginals fitted over one or more banks, joined by an empirical
+equicorrelation structure (the one-factor Gaussian copula), with a seeded
+``sample(n, rng)`` — the candidate model behind the ``model_guided``
+search driver (``repro.api.search``).
 """
 
 from __future__ import annotations
@@ -45,7 +51,9 @@ import math
 import os
 import tempfile
 import zlib
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.core.signatures import Signature, structural_key
 from repro.core.stats import KernelStats
@@ -53,6 +61,7 @@ from repro.core.stats import KernelStats
 from .serialize import dumps_canonical
 
 BANK_VERSION = 1
+COPULA_VERSION = 1
 
 
 class Harvest:
@@ -349,7 +358,10 @@ class StatisticsBank:
 def _fit_loglinear(pairs: List[Tuple[float, float]],
                    min_matches: int) -> Tuple[float, float]:
     """log-space least squares through (source mean, target mean) pairs;
-    degrades to a median-ratio shift, then to identity."""
+    degrades to a median-ratio shift, then to identity.  The slope is
+    clamped to be non-negative: the remap must stay a monotone quantile
+    map (a negative fitted slope — possible on adversarial matched pairs —
+    would invert the source ordering, which no CDF->CDF map can do)."""
     if not pairs:
         return 1.0, 0.0
     logs = [(math.log(s), math.log(t)) for s, t in pairs]
@@ -363,5 +375,180 @@ def _fit_loglinear(pairs: List[Tuple[float, float]],
     if sxx <= 0.0:
         return 1.0, my - mx
     sxy = sum((ls - mx) * (lt - my) for ls, lt in logs)
-    a = sxy / sxx
+    a = max(sxy / sxx, 0.0)
     return a, my - a * mx
+
+
+# ------------------------------------------------- Gaussian-copula sampler
+
+def _norm_ppf(q: float) -> float:
+    """Standard-normal inverse CDF (Acklam's rational approximation,
+    |relative error| < 1.15e-9 — far inside the marginals' own CI width).
+    Dependency-free so the sampler needs nothing beyond numpy."""
+    if not 0.0 < q < 1.0:
+        if q == 0.0:
+            return -math.inf
+        if q == 1.0:
+            return math.inf
+        raise ValueError(f"quantile level {q!r} outside [0, 1]")
+    a = (-3.969683028665376e+01, 2.209460984245205e+02,
+         -2.759285104469687e+02, 1.383577518672690e+02,
+         -3.066479806614716e+01, 2.506628277459239e+00)
+    b = (-5.447609879822406e+01, 1.615858368580409e+02,
+         -1.556989798598866e+02, 6.680131188771972e+01,
+         -1.328068155288572e+01)
+    c = (-7.784894002430293e-03, -3.223964580411365e-01,
+         -2.400758277161838e+00, -2.549732539343734e+00,
+         4.374664141464968e+00, 2.938163982698783e+00)
+    d = (7.784695709041462e-03, 3.224671290700398e-01,
+         2.445134137142996e+00, 3.754408661907416e+00)
+    lo, hi = 0.02425, 1.0 - 0.02425
+    if q < lo:
+        u = math.sqrt(-2.0 * math.log(q))
+        return (((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4])
+                * u + c[5]) / ((((d[0] * u + d[1]) * u + d[2]) * u
+                                + d[3]) * u + 1.0)
+    if q > hi:
+        u = math.sqrt(-2.0 * math.log(1.0 - q))
+        return -(((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u + c[4])
+                 * u + c[5]) / ((((d[0] * u + d[1]) * u + d[2]) * u
+                                 + d[3]) * u + 1.0)
+    u = q - 0.5
+    r = u * u
+    return (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4])
+            * r + a[5]) * u / (((((b[0] * r + b[1]) * r + b[2]) * r
+                                 + b[3]) * r + b[4]) * r + 1.0)
+
+
+def _equicorrelation(banks: Sequence["StatisticsBank"],
+                     keys: Sequence[str]) -> float:
+    """Estimate the one-factor (equicorrelated) Gaussian-copula dependence
+    across kernels from per-bank log-mean observations.
+
+    Each bank contributes one observation of the per-kernel mean vector;
+    after standardizing every kernel's log-mean across banks, the variance
+    of the per-bank cross-kernel average identifies rho (for standardized
+    equicorrelated z's, Var[mean_k z_k] = (1 + (K-1) rho) / K).  A single
+    bank — one observation — carries no dependence evidence: rho = 0,
+    independent marginals."""
+    if len(banks) < 2:
+        return 0.0
+    common = [k for k in keys
+              if all(k in b.entries and b.entries[k].mean > 0
+                     for b in banks)]
+    if len(common) < 2:
+        return 0.0
+    x = np.log([[b.entries[k].mean for k in common] for b in banks])
+    sd = x.std(axis=0)
+    ok = sd > 0
+    if int(ok.sum()) < 2:
+        return 0.0
+    z = (x[:, ok] - x[:, ok].mean(axis=0)) / sd[ok]
+    k = z.shape[1]
+    v = float(np.mean(z.mean(axis=1) ** 2))
+    rho = (k * v - 1.0) / (k - 1.0)
+    return float(min(max(rho, 0.0), 0.99))
+
+
+class CopulaModel:
+    """Seeded generative view of recorded banks: per-kernel Gaussian
+    marginals joined by a one-factor Gaussian copula.
+
+    ``fit`` Chan-merges one or more ``StatisticsBank``s into per-key
+    (mean, std) marginals — the same moments the quantile remap maps
+    between — and estimates a single empirical equicorrelation ``rho``
+    from the banks' per-kernel mean vectors (machines/allocations whose
+    kernels are all systematically fast or slow together).  ``sample``
+    draws joint kernel-time vectors: a shared factor ``g`` plus
+    independent noise, pushed through each marginal's quantile transform
+    (Gaussian marginals: the affine z-score map — ``quantile`` exposes the
+    per-key inverse CDF), clipped at zero since times are nonnegative.
+
+    Degenerate inputs degrade, never raise: an empty bank yields a falsy
+    model whose ``sample`` returns shape ``(n, 0)`` (callers fall back to
+    uniform candidate sampling); a single kernel gets one marginal;
+    zero-variance or single-sample entries get ``std = 0`` — constant
+    draws at the mean.  Round-trips losslessly through JSON and
+    fingerprints for checkpoint identity like the banks it came from.
+    """
+
+    def __init__(self, keys: Sequence[str], mean, std, n, rho: float = 0.0,
+                 *, meta: Optional[List[dict]] = None):
+        self.keys: List[str] = list(keys)
+        self.mean = np.asarray(mean, dtype=float)
+        self.std = np.asarray(std, dtype=float)
+        self.n = np.asarray(n, dtype=int)
+        self.rho = float(rho)
+        self.meta: List[dict] = list(meta or [])
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+    def __bool__(self) -> bool:
+        return bool(self.keys)
+
+    @classmethod
+    def fit(cls, banks: Sequence["StatisticsBank"]) -> "CopulaModel":
+        """Fit marginals over the Chan-merged union of ``banks`` and the
+        cross-bank equicorrelation (0 with fewer than two banks)."""
+        banks = [b if isinstance(b, StatisticsBank)
+                 else StatisticsBank.from_json(b) for b in banks]
+        merged = StatisticsBank()
+        for b in banks:
+            merged = merged.merge(b)
+        keys = sorted(k for k, st in merged.entries.items() if st.mean > 0)
+        mean, std, nobs = [], [], []
+        for k in keys:
+            st = merged.entries[k]
+            var = st.variance
+            mean.append(st.mean)
+            std.append(math.sqrt(var)
+                       if st.n >= 2 and math.isfinite(var) else 0.0)
+            nobs.append(st.n)
+        return cls(keys, mean, std, nobs, _equicorrelation(banks, keys),
+                   meta=[m for b in banks for m in b.meta])
+
+    def quantile(self, key: str, q: float) -> float:
+        """Per-key marginal inverse CDF (monotone non-decreasing in ``q``;
+        ``quantile(key, 0.5)`` is the key's mean — the remap machinery's
+        marginal-preservation, pointwise)."""
+        i = self.keys.index(key)
+        return max(float(self.mean[i] + self.std[i] * _norm_ppf(q)), 0.0)
+
+    def sample(self, n: int, rng) -> np.ndarray:
+        """``(n, len(keys))`` joint kernel-time draws.  ``rng`` is a
+        ``numpy.random.Generator`` or an int seed; the same seed yields
+        the same draws on any process — the determinism the model-guided
+        checkpoint carry relies on."""
+        if not isinstance(rng, np.random.Generator):
+            rng = np.random.default_rng(int(rng))
+        k = len(self.keys)
+        if k == 0:
+            return np.zeros((int(n), 0))
+        g = rng.standard_normal((int(n), 1))
+        e = rng.standard_normal((int(n), k))
+        z = math.sqrt(self.rho) * g + math.sqrt(1.0 - self.rho) * e
+        return np.maximum(self.mean + self.std * z, 0.0)
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"version": COPULA_VERSION, "keys": list(self.keys),
+                "mean": [float(v) for v in self.mean],
+                "std": [float(v) for v in self.std],
+                "n": [int(v) for v in self.n],
+                "rho": self.rho, "meta": self.meta}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "CopulaModel":
+        if d.get("version", COPULA_VERSION) != COPULA_VERSION:
+            raise ValueError(
+                f"copula model version {d.get('version')!r} unsupported "
+                f"(want {COPULA_VERSION})")
+        return cls(d["keys"], d["mean"], d["std"], d["n"], d["rho"],
+                   meta=list(d.get("meta", [])))
+
+    def fingerprint(self) -> str:
+        payload = dumps_canonical(
+            {k: v for k, v in self.to_json().items() if k != "meta"})
+        return f"copula:{zlib.crc32(payload.encode()):08x}:{len(self)}"

@@ -1,0 +1,306 @@
+"""Search-driver contract tests, centered on ``model_guided``.
+
+- golden regression: the model-guided driver on the Capital ci grid lands
+  the committed exhaustive winner (benchmarks/results/transfer.json,
+  PR-3's artifact of the PR-2 protocol) while executing <10% of the grid;
+- bit-identity: serial == fork-pool == resumed-from-checkpoint (the
+  sampler RNG is carried like the sim RNG), and ``sweep(driver=...)``
+  equals a session constructed with that search;
+- the roofline prefilter never dispatches a candidate whose analytic
+  lower bound exceeds the incumbent's upper CI, passes everything with no
+  incumbent, and the prune is visible in the sweep's task journal;
+- degenerate models fall back to uniform candidate sampling;
+- ``SearchSpace`` enumeration order is pinned: construction order,
+  unique names, and a process-stable ``order_fingerprint`` that
+  model-guided resume validates.
+"""
+
+import json
+import math
+import os
+import tempfile
+
+import pytest
+
+from repro.api import (AutotuneSession, BackendRun, ConfigPoint,
+                       Measurement, SearchSpace, SimBackend,
+                       StatisticsBank, model_guided)
+from repro.api.scheduler import fork_available
+from repro.core.policies import policy as make_policy
+from repro.linalg.studies import search_space
+
+_RESULTS = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "results")
+BANK_PATH = os.path.join(_RESULTS, "capital-cholesky-ci_stats_bank.json")
+TRANSFER_PATH = os.path.join(_RESULTS, "transfer.json")
+
+
+def _capital_space():
+    return search_space("capital-cholesky", scale="ci")
+
+
+def _bank():
+    return StatisticsBank.load(BANK_PATH)
+
+
+def _exhaustive_winner() -> str:
+    """The committed exhaustive (paper-protocol) winner on Capital ci."""
+    with open(TRANSFER_PATH) as f:
+        rows = json.load(f)
+    cold = next(r for r in rows if r["run"] == "cold")
+    return cold["chosen"]
+
+
+def _session(space, backend=None, **kw):
+    kw.setdefault("search", "model_guided")
+    kw.setdefault("search_options", {"banks": [_bank()], "seed": 0})
+    return AutotuneSession(space, backend=backend or SimBackend(),
+                           policy="eager", tolerance=0.25, trials=2, **kw)
+
+
+def _strip(result) -> dict:
+    d = result.to_json()
+    d.pop("wall_s", None)
+    return d
+
+
+# -- golden regression: same winner, <10% of the grid -------------------------
+
+def test_model_guided_capital_ci_matches_exhaustive_winner():
+    result = _session(_capital_space()).run()
+    assert result.extra["fallback"] is None        # the model guided
+    assert result.extra["coverage"] < 0.10
+    winner = _exhaustive_winner()
+    assert result.extra["best"] == winner
+    assert result.chosen.name == winner
+    # unvisited points carry shape-uniform, unmeasured records
+    visited = set(result.extra["dispatched"])
+    for rec in result.records:
+        if rec.name not in visited:
+            assert rec.predictions == [] and rec.executed == 0
+            assert math.isinf(rec.predicted)
+
+
+# -- bit-identity: serial == fork == resumed ----------------------------------
+
+def test_model_guided_serial_equals_fork_and_driver_override():
+    space = _capital_space()
+    kw = dict(policies=["eager"], tolerances=[0.25, 0.125])
+    serial = [_strip(r) for r in _session(space).sweep(workers=1, **kw)]
+    if fork_available():
+        forked = [_strip(r) for r in _session(space).sweep(workers=2,
+                                                           **kw)]
+        assert forked == serial
+    # sweep(driver=...) on an exhaustive-configured session is the same
+    # sweep — and leaves the session's own search untouched
+    sess = _session(space, search="exhaustive")
+    over = [_strip(r) for r in sess.sweep(driver="model_guided",
+                                          workers=1, **kw)]
+    assert over == serial
+    assert sess.search == "exhaustive"
+
+
+class _FailingBackend(SimBackend):
+    """Raises on the Nth selective trial (None = never); counts profile
+    calls so resume can prove it skipped re-selection."""
+
+    def __init__(self, fail_after, **kw):
+        super().__init__(**kw)
+        self.fail_after = fail_after
+        self.profile_calls = 0
+
+    def open(self, *a, **kw):
+        run = super().open(*a, **kw)
+        orig_trial, seen = run.run_trial, [0]
+
+        def trial(point):
+            seen[0] += 1
+            if self.fail_after is not None and seen[0] > self.fail_after:
+                raise RuntimeError("injected mid-racing failure")
+            return orig_trial(point)
+
+        orig_profile = run.kernel_profile
+
+        def profile(point):
+            self.profile_calls += 1
+            return orig_profile(point)
+
+        run.run_trial = trial
+        run.kernel_profile = profile
+        return run
+
+
+def test_model_guided_resume_is_bit_identical():
+    space = _capital_space()
+    opts = {"banks": [_bank()], "seed": 0, "top_k": 4}
+    ref = _session(space, search_options=opts).run()
+    assert len(ref.extra["dispatched"]) == 4
+
+    ck = os.path.join(tempfile.mkdtemp(prefix="repro-search-"), "ck.json")
+    with pytest.raises(RuntimeError, match="injected"):
+        _session(space, backend=_FailingBackend(2),
+                 search_options=opts).run(checkpoint=ck)
+    with open(ck) as f:
+        data = json.load(f)
+    # the candidate selection (survivors + sampler RNG + space order) was
+    # journaled before racing started
+    (state,) = data["search_state"].values()
+    # survivors are journaled in ranked order; dispatch re-sorts to
+    # space enumeration order
+    assert sorted(state["survivors"]) == sorted(ref.extra["dispatched"])
+    assert state["space_order"] == space.order_fingerprint()
+    assert state["rng"]["bit_generator"] == "PCG64"
+
+    resumed_backend = _FailingBackend(None)
+    resumed = _session(space, backend=resumed_backend,
+                       search_options=opts).run(checkpoint=ck)
+    assert _strip(resumed) == _strip(ref)
+    # resume replayed the journaled selection: no re-profiling, no
+    # re-consumed sampler draws
+    assert resumed_backend.profile_calls == 0
+    with open(ck) as f:
+        data = json.load(f)
+    assert data["search_state"] == {}       # cleared by the final result
+    assert len(data["results"]) == 1
+
+
+def test_model_guided_resume_rejects_reordered_space():
+    space = _capital_space()
+    run = SimBackend().open(space, make_policy("eager", tolerance=0.25))
+    stale = {"space_order": "order:deadbeef:15", "survivors": [],
+             "roofline_pruned": [], "fallback": None, "rho": 0.0,
+             "model_keys": 0, "rng": {}}
+    with pytest.raises(ValueError, match="enumeration"):
+        model_guided(run, space, make_policy("eager", tolerance=0.25),
+                     start_state=stale)
+
+
+# -- roofline prefilter -------------------------------------------------------
+
+class _StubRun(BackendRun):
+    """Deterministic driver-level backend: fixed lower bounds and trial
+    times, no kernel structure (exercises the uniform fallback too)."""
+
+    def __init__(self, bounds, times):
+        self.bounds = bounds
+        self.times = times
+        self.trials = []
+
+    def reset_models(self):
+        pass
+
+    def cost_lower_bound(self, point):
+        return self.bounds.get(point.name)
+
+    def run_trial(self, point):
+        self.trials.append(point.name)
+        t = self.times[point.name]
+        return Measurement(predicted=t, time=t, cost=t, executed=1)
+
+
+def _stub_space():
+    return SearchSpace(name="stub", points=[
+        ConfigPoint(name="fast"), ConfigPoint(name="slow"),
+        ConfigPoint(name="unknown")])
+
+
+def test_roofline_prefilter_never_dispatches_dominated_points():
+    pol = make_policy("conditional", tolerance=0.25)
+    run = _StubRun(bounds={"fast": 0.5, "slow": 2.0},
+                   times={"fast": 0.6, "slow": 2.5, "unknown": 1.0})
+    records, extra = model_guided(
+        run, _stub_space(), pol, top_k=3, seed=0,
+        incumbent={"mean": 1.0, "halfwidth": 0.1})
+    assert extra["fallback"] == "uniform"      # no kernel structure
+    # lower bound 2.0 > incumbent upper 1.1: provably dominated, never run
+    assert extra["roofline_pruned"] == ["slow"]
+    assert "slow" not in run.trials
+    assert "slow" not in extra["dispatched"]
+    # an unknown bound (None) is not a proof: the point stays dispatched
+    assert set(extra["dispatched"]) == {"fast", "unknown"}
+    slow = next(r for r in records if r.name == "slow")
+    assert slow.predictions == [] and slow.extra["roofline_pruned"]
+    assert extra["best"] == "fast"
+
+
+def test_roofline_prefilter_empty_incumbent_passes_everything():
+    pol = make_policy("conditional", tolerance=0.25)
+    for incumbent in (None, {}):
+        run = _StubRun(bounds={"fast": 0.5, "slow": 2.0},
+                       times={"fast": 0.6, "slow": 2.5, "unknown": 1.0})
+        _, extra = model_guided(run, _stub_space(), pol, top_k=3,
+                                seed=0, incumbent=incumbent)
+        assert extra["roofline_pruned"] == []
+        assert set(extra["dispatched"]) == {"fast", "slow", "unknown"}
+
+
+def test_roofline_prefilter_can_prune_everything():
+    pol = make_policy("conditional", tolerance=0.25)
+    run = _StubRun(bounds={"fast": 0.5, "slow": 2.0, "unknown": 3.0},
+                   times={"fast": 0.6, "slow": 2.5, "unknown": 1.0})
+    records, extra = model_guided(run, _stub_space(), pol, top_k=3,
+                                  seed=0, incumbent=0.1)
+    assert run.trials == [] and extra["best"] is None
+    assert extra["dispatched"] == [] and extra["coverage"] == 0.0
+    assert all(r.predictions == [] for r in records)
+
+
+def test_roofline_prune_lands_in_the_task_journal():
+    """Through the sweep scheduler: a dominated candidate is absent from
+    the journaled study's dispatch list and its record shows no
+    measurements — the 'never dispatched' proof survives in the
+    checkpoint, not just the in-memory result."""
+    space = _capital_space()
+    ck = os.path.join(tempfile.mkdtemp(prefix="repro-search-"), "ck.json")
+    opts = {"banks": [_bank()], "seed": 0,
+            "incumbent": {"upper": 1e-12}}    # dominates every candidate
+    (res,) = _session(space, search_options=opts).sweep(
+        policies=["eager"], tolerances=[0.25], checkpoint=ck)
+    with open(ck) as f:
+        (journaled,) = json.load(f)["results"].values()
+    assert journaled["extra"]["dispatched"] == []
+    assert journaled["extra"]["roofline_pruned"] == \
+        res.extra["roofline_pruned"] != []
+    for rec in journaled["records"]:
+        assert rec["predictions"] == [] and rec["executed"] == 0
+
+
+# -- degenerate model: uniform fallback ---------------------------------------
+
+def test_empty_model_falls_back_to_uniform_sampling():
+    space = _capital_space().subset(5)
+    result = _session(space, search_options={"banks": [], "seed": 3,
+                                             "top_k": 2}).run()
+    assert result.extra["fallback"] == "uniform"
+    assert len(result.extra["dispatched"]) == 2
+    again = _session(space, search_options={"banks": [], "seed": 3,
+                                            "top_k": 2}).run()
+    assert _strip(again) == _strip(result)         # seed-deterministic
+
+
+# -- SearchSpace enumeration order --------------------------------------------
+
+def test_space_rejects_duplicate_point_names():
+    with pytest.raises(ValueError, match="twice"):
+        SearchSpace(name="dup", points=[ConfigPoint(name="a"),
+                                        ConfigPoint(name="a")])
+
+
+def test_space_enumeration_order_is_construction_order():
+    pts = [ConfigPoint(name=f"p{i}") for i in range(5)]
+    space = SearchSpace(name="s", points=pts)
+    assert [p.name for p in space] == [f"p{i}" for i in range(5)]
+    assert [p.name for p in space.subset(3)] == ["p0", "p1", "p2"]
+
+
+def test_order_fingerprint_pins_the_enumeration():
+    space = _capital_space()
+    # process-stable: pinned literal — a reordering of the study's points
+    # (or a renamed config) must fail loudly, because checkpointed
+    # model-guided selections index into this exact sequence
+    assert space.order_fingerprint() == "order:8f95fc03:15"
+    reordered = SearchSpace(name=space.name,
+                            points=list(reversed(space.points)),
+                            world_size=space.world_size)
+    assert reordered.order_fingerprint() != space.order_fingerprint()
+    assert space.subset(5).order_fingerprint() != space.order_fingerprint()
