@@ -23,11 +23,28 @@ field, ``events_per_sec_cold_scalar``, records the same-session
   straggler branch off, where the cold interpreter pre-draws every sample
   of the run in one vectorized call (PR-4 target).
 
+PR 9 adds the compiled-warm split and the counter-RNG cold metric:
+
+- ``events_per_sec_warm`` now measures the compiled warm program
+  (segmented, vectorized replay — the default selective path);
+- ``events_per_sec_warm_scalar`` — a same-session ``compiled=False``
+  reference running the scalar event-program interpreter over the same
+  protocol; ``warm_speedup_vs_scalar`` is their ratio (the CI gate's
+  compiled-throughput signal);
+- ``events_per_sec_cold_counter`` — the straggler-ON recording run under
+  the counter-based (Philox-style) RNG discipline, whose mixed
+  normal/uniform draws batch per segment (the PR-5 residual fix);
+  ``cold_counter_speedup_vs_scalar`` compares it to the legacy per-event
+  scalar fallback at the same straggler setting;
+- ``compiled`` — warm-program segmentation metadata (segment counts,
+  fused events, batch sizes), also emitted into check_results.json.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full sweep
     PYTHONPATH=src python -m benchmarks.bench_engine --quick    # ~10 s sanity
-    PYTHONPATH=src python -m benchmarks.bench_engine --verify   # cold-path
-                       # event-program/bit-identity assertions, then exit
+    PYTHONPATH=src python -m benchmarks.bench_engine --verify   # cold-path,
+                       # compiled-path and counter-RNG bit-identity
+                       # assertions, then exit
     PYTHONPATH=src python -m benchmarks.bench_engine --out path.json
 """
 
@@ -59,30 +76,35 @@ GEOMETRIES = {
 
 
 def _setup(world_size: int, *, pol: str, tol: float, seed: int,
-           straggler_p=None, trace_cache: bool = True):
+           straggler_p=None, trace_cache: bool = True,
+           compiled: bool = True, counter_rng: bool = False):
     pr, pc, n, tile = GEOMETRIES[world_size]
     world = World(world_size)
     critter = Critter(world, policy(pol, tolerance=tol))
     kw = {} if straggler_p is None else {"straggler_p": straggler_p}
-    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed, **kw)
+    cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed,
+                   counter_rng=counter_rng, **kw)
     rt = Runtime(world, critter, cm.sample, seed=seed,
-                 trace_cache=trace_cache)
+                 trace_cache=trace_cache, compiled=compiled)
     prog = slate_cholesky.make_program(world, n=n, tile=tile, lookahead=1,
                                        pr=pr, pc=pc)
     return rt, prog
 
 
 def bench_cold(world_size: int, *, pol: str = "online", tol: float = 0.25,
-               seed: int = 0, straggler_p=0.0,
-               trace_cache: bool = True) -> dict:
+               seed: int = 0, straggler_p=0.0, trace_cache: bool = True,
+               counter_rng: bool = False) -> dict:
     """One recording (forced) run in isolation — the batched cold path
     when ``straggler_p == 0`` (vectorized pre-draw), the scalar-fallback
-    cold path otherwise, and with ``trace_cache=False`` the seed-style
+    cold path otherwise (unless ``counter_rng=True``, where the
+    counter-based draw discipline batches mixed normal/uniform draws even
+    with stragglers on), and with ``trace_cache=False`` the seed-style
     interleaved scalar pass that serves as the same-session reference the
     batched speedup is measured against (the shared CI box swings 2-4x
     between sessions, so only within-session ratios are stable)."""
     rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed,
-                      straggler_p=straggler_p, trace_cache=trace_cache)
+                      straggler_p=straggler_p, trace_cache=trace_cache,
+                      counter_rng=counter_rng)
     t0 = time.perf_counter()
     res = rt.run(prog, force_execute=True)
     dt = time.perf_counter() - t0
@@ -91,16 +113,13 @@ def bench_cold(world_size: int, *, pol: str = "online", tol: float = 0.25,
             "straggler_p": straggler_p}
 
 
-def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
-                selective_iters: int = 6, warmup: int = 2,
-                seed: int = 0, cold_repeats: int = 3) -> dict:
-    """One full (reference) execution followed by ``selective_iters``
-    selective iterations — the tuner's per-configuration pattern — under
-    the DEFAULT cost model (straggler branch on, so the cold run exercises
-    the scalar-fallback draws), plus one isolated batched cold run
-    (straggler branch off, vectorized pre-draw)."""
-    pr, pc, n, tile = GEOMETRIES[world_size]
-    rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed)
+def _study_session(world_size: int, *, pol: str, tol: float, seed: int,
+                   selective_iters: int, warmup: int,
+                   compiled: bool) -> dict:
+    """One tuner-pattern session (1 forced + ``selective_iters`` selective
+    iterations) with per-iteration timings and the warm aggregate."""
+    rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed,
+                      compiled=compiled)
     runs = []
     total_events = 0
     total_wall = 0.0
@@ -120,34 +139,84 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
         if i > warmup:
             warm_events += res.events
             warm_wall += dt
-    # batched-vs-scalar cold pair: alternate the two and keep min-wall of
-    # each so the pairing survives the box's second-scale throughput
-    # swings (a single A-then-B measurement can land A in a slow patch
-    # and B in a fast one, inverting the ratio)
-    b_walls, s_walls = [], []
+    return {
+        "rt": rt, "prog": prog, "runs": runs,
+        "total_events": total_events, "total_wall": total_wall,
+        "warm_rate": round(warm_events / warm_wall, 1)
+        if warm_wall > 0 else 0.0,
+    }
+
+
+def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
+                selective_iters: int = 6, warmup: int = 2,
+                seed: int = 0, cold_repeats: int = 3) -> dict:
+    """One full (reference) execution followed by ``selective_iters``
+    selective iterations — the tuner's per-configuration pattern — under
+    the DEFAULT cost model (straggler branch on, so the cold run exercises
+    the scalar-fallback draws), plus one isolated batched cold run
+    (straggler branch off, vectorized pre-draw).
+
+    PR 9: the selective iterations run through the compiled warm program
+    (segmented vectorized replay) by default; a second, ``compiled=False``
+    session over the same protocol provides the same-session scalar-warm
+    reference the compiled speedup is taken against, and the straggler
+    cold pair (counter-RNG batched vs legacy scalar-fallback) measures the
+    PR-5 residual fix."""
+    pr, pc, n, tile = GEOMETRIES[world_size]
+    comp = _study_session(world_size, pol=pol, tol=tol, seed=seed,
+                          selective_iters=selective_iters, warmup=warmup,
+                          compiled=True)
+    scal = _study_session(world_size, pol=pol, tol=tol, seed=seed,
+                          selective_iters=selective_iters, warmup=warmup,
+                          compiled=False)
+    runs = comp["runs"]
+    total_events = comp["total_events"]
+    total_wall = comp["total_wall"]
+    segmeta = comp["rt"].warm_meta(comp["prog"])
+    # batched-vs-scalar cold pairs: alternate the variants and keep
+    # min-wall of each so the pairing survives the box's second-scale
+    # throughput swings (a single A-then-B measurement can land A in a
+    # slow patch and B in a fast one, inverting the ratio).  Two pairs:
+    # straggler-off batched pre-draw vs interleaved scalar (PR 4), and
+    # straggler-ON counter-RNG batched vs legacy scalar fallback (PR 9 —
+    # the PR-5 residual: mixed normal/uniform draws batched per segment).
+    b_walls, s_walls, cb_walls, cs_walls = [], [], [], []
     n_events = 0
     for _ in range(cold_repeats):
         b = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
                        straggler_p=0.0)
         s = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
                        straggler_p=0.0, trace_cache=False)
+        cb = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                        straggler_p=0.002, counter_rng=True)
+        cs = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                        straggler_p=0.002, counter_rng=False)
         b_walls.append(b["wall_s"])
         s_walls.append(s["wall_s"])
+        cb_walls.append(cb["wall_s"])
+        cs_walls.append(cs["wall_s"])
         n_events = b["events"]
-    batched = {"events_per_sec": round(n_events / min(b_walls), 1)}
-    scalar = {"events_per_sec": round(n_events / min(s_walls), 1)}
+    batched = round(n_events / min(b_walls), 1)
+    scalar = round(n_events / min(s_walls), 1)
+    ctr_batched = round(n_events / min(cb_walls), 1)
+    ctr_scalar = round(n_events / min(cs_walls), 1)
     return {
         "study": "slate-cholesky", "policy": pol, "tolerance": tol,
         "world_size": world_size, "n": n, "tile": tile, "lookahead": 1,
         "total_events": total_events, "total_wall_s": round(total_wall, 4),
         "events_per_sec": round(total_events / total_wall, 1),
-        "events_per_sec_warm": round(warm_events / warm_wall, 1)
-        if warm_wall > 0 else 0.0,
+        "events_per_sec_warm": comp["warm_rate"],
+        "events_per_sec_warm_scalar": scal["warm_rate"],
+        "warm_speedup_vs_scalar": round(
+            comp["warm_rate"] / scal["warm_rate"], 2)
+        if scal["warm_rate"] > 0 else 0.0,
         "events_per_sec_cold": runs[0]["events_per_sec"],
-        "events_per_sec_cold_batched": batched["events_per_sec"],
-        "events_per_sec_cold_scalar": scalar["events_per_sec"],
-        "cold_speedup_vs_scalar": round(
-            batched["events_per_sec"] / scalar["events_per_sec"], 2),
+        "events_per_sec_cold_batched": batched,
+        "events_per_sec_cold_scalar": scalar,
+        "cold_speedup_vs_scalar": round(batched / scalar, 2),
+        "events_per_sec_cold_counter": ctr_batched,
+        "cold_counter_speedup_vs_scalar": round(ctr_batched / ctr_scalar, 2),
+        "compiled": segmeta,
         "runs": runs,
     }
 
@@ -195,16 +264,13 @@ def verify_cold_path(world_size: int = 16) -> dict:
     assert ev_batched == ev_scalar, (
         "batched and unbatched cold runs recorded different event programs")
 
-    fields = ("predicted_time", "wall_time", "crit_comp", "crit_comm",
-              "measured_time", "max_measured_comp", "executed", "skipped",
-              "events")
     reports = []
     states = []
     for trace_cache in (True, False):
         rt, prog = _setup(world_size, pol="online", tol=0.25, seed=0,
                           straggler_p=0.0, trace_cache=trace_cache)
         res = rt.run(prog, force_execute=True)
-        reports.append({f: getattr(res, f) for f in fields})
+        reports.append({f: getattr(res, f) for f in _REPORT_FIELDS})
         states.append(rt._rng.bit_generator.state)
     assert reports[0] == reports[1], (
         f"batched cold report diverged: {reports[0]} vs {reports[1]}")
@@ -214,9 +280,158 @@ def verify_cold_path(world_size: int = 16) -> dict:
             "report": reports[0]}
 
 
+# ---------------------------------------------------- compiled-path verify
+
+_REPORT_FIELDS = ("predicted_time", "wall_time", "crit_comp", "crit_comm",
+                  "measured_time", "max_measured_comp", "executed",
+                  "skipped", "events")
+
+
+def _engine_snapshot(critter) -> tuple:
+    """Full rank-state fingerprint: statistics mirrors, counts, path
+    profiles, per-rank clocks, global skip state and every Welford
+    accumulator — byte-exact, so any drift in the compiled replay shows."""
+    S = critter.state
+    return (S.mean_arr.tobytes(), S.freq.tobytes(), S.seen.tobytes(),
+            S.skip_ok.tobytes(), S.iter_exec.tobytes(), S.clock.tobytes(),
+            S.path_exec.tobytes(), S.path_comm.tobytes(),
+            S.goff.tobytes(), S.gmean.tobytes(),
+            sorted(critter.global_off),
+            sorted((r, sid, st.n, st.mean, st.m2, st.total, st.min_t,
+                    st.max_t)
+                   for r in range(S.n_ranks)
+                   for sid, st in S.kbar[r].items()))
+
+
+def _selective_trace(world_size: int, *, pol: str, straggler_p: float,
+                     trace_cache: bool, compiled: bool,
+                     iters: int = 3) -> list:
+    """Forced run + ``iters`` selective iterations; returns per-iteration
+    reports, per-iteration engine-state fingerprints and the final RNG
+    bit-generator state."""
+    rt, prog = _setup(world_size, pol=pol, tol=0.25, seed=0,
+                      straggler_p=straggler_p, trace_cache=trace_cache,
+                      compiled=compiled)
+    trace = []
+    for i in range(1 + iters):
+        res = rt.run(prog, force_execute=(i == 0))
+        trace.append(tuple(getattr(res, f) for f in _REPORT_FIELDS))
+        trace.append(_engine_snapshot(rt.critter))
+    trace.append(rt._rng.bit_generator.state)
+    return trace
+
+
+def verify_compiled_path(world_size: int = 16) -> dict:
+    """Assert the compiled (segmented, vectorized-replay) warm program is
+    bit-identical to the scalar engine.
+
+    For each policy x straggler-branch combination the tuner protocol
+    (forced run + 3 selective iterations) is run three ways — compiled
+    warm program, scalar event-program interpreter (``compiled=False``)
+    and the seed-style live engine (``trace_cache=False``) — and all
+    three must agree on every iteration report field, the full engine
+    state after every iteration (statistics, mean mirrors, counts, path
+    profiles, clocks, Welford accumulators, global skip state) and the
+    sampler RNG stream.  Raises AssertionError on any divergence.
+
+    The full 5-policies x 3-studies matrix lives in
+    ``tests/test_cold_path.py`` / ``tests/test_compiled_path.py``; this
+    entry point is the quick in-process gate check.sh runs before timing.
+    """
+    checked = 0
+    for pol in ("online", "eager"):
+        for straggler_p in (0.0, 0.002):
+            live = _selective_trace(world_size, pol=pol,
+                                    straggler_p=straggler_p,
+                                    trace_cache=False, compiled=True)
+            scalar = _selective_trace(world_size, pol=pol,
+                                      straggler_p=straggler_p,
+                                      trace_cache=True, compiled=False)
+            comp = _selective_trace(world_size, pol=pol,
+                                    straggler_p=straggler_p,
+                                    trace_cache=True, compiled=True)
+            for i, (a, b, c) in enumerate(zip(live, scalar, comp)):
+                assert a == c, (f"compiled path diverged from live engine "
+                                f"({pol}, straggler={straggler_p}, "
+                                f"trace step {i})")
+                assert b == c, (f"compiled path diverged from scalar "
+                                f"interpreter ({pol}, "
+                                f"straggler={straggler_p}, trace step {i})")
+            checked += 1
+    rt, prog = _setup(world_size, pol="online", tol=0.25, seed=0)
+    meta = rt.warm_meta(prog)
+    assert meta["segments"] > 0 and meta["fused_events"] > 0, (
+        f"warm program recorded no fused segments: {meta}")
+    return {"world_size": world_size, "configs": checked,
+            "compiled": meta}
+
+
+def verify_counter_rng(world_size: int = 16) -> dict:
+    """Assert the counter-based (Philox-style) draw discipline is a pure
+    optimization: (1) per-event scalar draws and per-segment batched
+    draws over the same counter range are bit-identical, including the
+    straggler branch; (2) with ``counter_rng=True`` the batched cold path
+    and the live engine produce identical reports and leave the draw
+    cursor at the same index (the counter-mode analogue of the
+    bit-generator state check); (3) selective iterations agree too."""
+    import numpy as np
+    from repro.core.signatures import Signature
+
+    # (1) scalar sample() vs sample_block() over the same counter range,
+    # straggler_p high enough that the straggler branch fires in-batch
+    sigs = [Signature("comp", "potrf", (256,)),
+            Signature("comp", "trsm", (256, 256)),
+            Signature("comp", "gemm", (256, 256, 256)),
+            Signature("comp", "syrk", (256, 256)),
+            Signature("comm", "bcast", (131072, 16, 1))] * 40
+    cm_a = CostModel(KNL_STAMPEDE2, allocation=0, seed=7,
+                     straggler_p=0.05, counter_rng=True)
+    cm_b = CostModel(KNL_STAMPEDE2, allocation=0, seed=7,
+                     straggler_p=0.05, counter_rng=True)
+    rng = np.random.default_rng(0)  # untouched in counter mode
+    scalar_ts = [cm_a.sample(sig, rng) for sig in sigs]
+    block_ts = cm_b.sample_block(sigs)
+    assert block_ts is not None, "sample_block inactive in counter mode"
+    assert scalar_ts == block_ts.tolist(), (
+        "counter-RNG scalar and batched draws diverged")
+    assert cm_a.draw_index == cm_b.draw_index == 3 * len(sigs), (
+        f"draw cursors diverged: {cm_a.draw_index} vs {cm_b.draw_index}")
+
+    # (2)+(3) batched cold + compiled selective vs live, counter mode,
+    # straggler branch ON (the PR-5 residual configuration)
+    cursors = []
+    traces = []
+    pr, pc, n, tile = GEOMETRIES[world_size]
+    for trace_cache in (True, False):
+        w = World(world_size)
+        c = Critter(w, policy("online", tolerance=0.25))
+        cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=0,
+                       straggler_p=0.002, counter_rng=True)
+        rt = Runtime(w, c, cm.sample, seed=0, trace_cache=trace_cache)
+        prog = slate_cholesky.make_program(w, n=n, tile=tile, lookahead=1,
+                                           pr=pr, pc=pc)
+        trace = []
+        for i in range(3):
+            res = rt.run(prog, force_execute=(i == 0))
+            trace.append(tuple(getattr(res, f) for f in _REPORT_FIELDS))
+            trace.append(_engine_snapshot(c))
+        traces.append(trace)
+        cursors.append(cm.draw_index)
+    for i, (a, b) in enumerate(zip(traces[0], traces[1])):
+        assert a == b, f"counter-RNG cold/warm diverged at trace step {i}"
+    assert cursors[0] == cursors[1], (
+        f"counter-RNG draw cursors diverged: {cursors}")
+    return {"world_size": world_size, "draws": cursors[0],
+            "scalar_block_parity": len(sigs)}
+
+
 _RATE_FIELDS = ("events_per_sec", "events_per_sec_warm",
+                "events_per_sec_warm_scalar",
                 "events_per_sec_cold", "events_per_sec_cold_batched",
-                "events_per_sec_cold_scalar")
+                "events_per_sec_cold_scalar",
+                "events_per_sec_cold_counter")
+_RATIO_FIELDS = ("warm_speedup_vs_scalar", "cold_speedup_vs_scalar",
+                 "cold_counter_speedup_vs_scalar")
 
 
 def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6,
@@ -230,17 +445,22 @@ def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6,
         reps = [bench_study(ws, selective_iters=selective_iters)
                 for _ in range(best_of)]
         r = max(reps, key=lambda x: x["events_per_sec_warm"])
-        for f in _RATE_FIELDS:
+        for f in _RATE_FIELDS + _RATIO_FIELDS:
             r[f] = max(rep[f] for rep in reps)
-        r["cold_speedup_vs_scalar"] = max(rep["cold_speedup_vs_scalar"]
-                                          for rep in reps)
         print(f"world={ws:4d}  events={r['total_events']:9d}  "
               f"wall={r['total_wall_s']:8.3f}s  "
               f"events/sec={r['events_per_sec']:10.1f}  "
               f"warm={r['events_per_sec_warm']:10.1f}  "
+              f"(vs scalar {r['warm_speedup_vs_scalar']:.2f}x)  "
               f"cold={r['events_per_sec_cold']:9.1f}  "
               f"cold_batched={r['events_per_sec_cold_batched']:9.1f}  "
-              f"(vs scalar {r['cold_speedup_vs_scalar']:.2f}x)")
+              f"(vs scalar {r['cold_speedup_vs_scalar']:.2f}x)  "
+              f"cold_counter={r['events_per_sec_cold_counter']:9.1f}  "
+              f"(vs scalar {r['cold_counter_speedup_vs_scalar']:.2f}x)")
+        seg = r["compiled"]
+        print(f"            compiled: {seg['segments']} segments, "
+              f"{seg['fused_events']} fused events, "
+              f"mean batch {seg['mean_batch']}, max {seg['max_batch']}")
         results.append(r)
     return {
         "meta": {
@@ -268,6 +488,13 @@ def main():
         summary = verify_cold_path()
         print(f"cold-path verify OK: {summary['events']} events, "
               f"report {summary['report']}")
+        summary = verify_compiled_path()
+        print(f"compiled-path verify OK: {summary['configs']} configs "
+              f"bit-identical, compiled meta {summary['compiled']}")
+        summary = verify_counter_rng()
+        print(f"counter-RNG verify OK: {summary['draws']} draws, "
+              f"scalar/block parity over "
+              f"{summary['scalar_block_parity']} signatures")
         return
     if args.quick:
         out = run(world_sizes=(16, 64), selective_iters=4,

@@ -24,7 +24,11 @@
 # reliably) must reach CHECK_RATIO (default 0.5) of the committed warm AND
 # batched-cold baselines in BENCH_engine.json.  A real engine regression
 # (the seed engine is ~7x below the warm baseline, the scalar cold path
-# ~2x below the cold one) still fails decisively.
+# ~2x below the cold one) still fails decisively.  PR 9 adds a
+# box-noise-immune signal on top: the compiled warm program's SAME-SESSION
+# speedup over the scalar interpreter must stay >= max(1.0, CHECK_RATIO x
+# the committed warm_speedup_vs_scalar), and the engine stage verifies
+# compiled-path + counter-RNG bit-identity before timing anything.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -82,40 +86,62 @@ import os
 import sys
 
 sys.path.insert(0, os.getcwd())
-from benchmarks.bench_engine import bench_study, verify_cold_path
+from benchmarks.bench_engine import (bench_study, verify_cold_path,
+                                     verify_compiled_path,
+                                     verify_counter_rng)
 
 RATIO = float(os.environ.get("CHECK_RATIO", "0.5"))
 
 summary = verify_cold_path(16)
 print(f"cold-path identity OK ({summary['events']} events)")
+summary = verify_compiled_path(16)
+seg = summary["compiled"]
+print(f"compiled-path identity OK ({summary['configs']} policy x "
+      f"straggler configs; {seg['segments']} segments, "
+      f"{seg['fused_events']} fused events)")
+summary = verify_counter_rng(16)
+print(f"counter-RNG identity OK ({summary['draws']} draws)")
 
 with open("BENCH_engine.json") as f:
     base = {r["world_size"]: r for r in json.load(f)["results"]}
 ref_warm = base[64]["events_per_sec_warm"]
 ref_cold = base[64].get("events_per_sec_cold_batched")
-if not ref_cold:
-    print("FAIL: committed BENCH_engine.json has no "
-          "events_per_sec_cold_batched baseline at world 64 — regenerate "
-          "it with `python -m benchmarks.bench_engine` (PR-4+ format)")
+ref_speedup = base[64].get("warm_speedup_vs_scalar")
+if not ref_cold or not ref_speedup:
+    print("FAIL: committed BENCH_engine.json lacks the "
+          "events_per_sec_cold_batched / warm_speedup_vs_scalar "
+          "baselines at world 64 — regenerate it with "
+          "`python -m benchmarks.bench_engine` (PR-9+ format)")
     sys.exit(1)
 
 best_warm = 0.0
 best_cold = 0.0
+best_speedup = 0.0
+seg = None
 for attempt in range(3):
     r = bench_study(64, selective_iters=4, cold_repeats=1)
     best_warm = max(best_warm, r["events_per_sec_warm"])
     best_cold = max(best_cold, r["events_per_sec_cold_batched"])
+    best_speedup = max(best_speedup, r["warm_speedup_vs_scalar"])
+    seg = r["compiled"]
     print(f"  attempt {attempt + 1}: warm events/sec "
           f"{r['events_per_sec_warm']:12.1f} (ratio "
-          f"{r['events_per_sec_warm'] / ref_warm:.2f}), cold_batched "
-          f"{r['events_per_sec_cold_batched']:12.1f} (ratio "
+          f"{r['events_per_sec_warm'] / ref_warm:.2f}, "
+          f"{r['warm_speedup_vs_scalar']:.2f}x vs scalar warm), "
+          f"cold_batched {r['events_per_sec_cold_batched']:12.1f} (ratio "
           f"{r['events_per_sec_cold_batched'] / ref_cold:.2f})")
-    if best_warm >= RATIO * ref_warm and best_cold >= RATIO * ref_cold:
+    if (best_warm >= RATIO * ref_warm and best_cold >= RATIO * ref_cold
+            and best_speedup >= max(1.0, RATIO * ref_speedup)):
         break
 
 print(f"RATIO_JSON \"warm_ratio\": {best_warm / ref_warm:.3f}, "
       f"\"cold_ratio\": {best_cold / ref_cold:.3f}, "
-      f"\"check_ratio\": {RATIO}")
+      f"\"compiled_speedup\": {best_speedup:.3f}, "
+      f"\"check_ratio\": {RATIO}, "
+      f"\"segments\": {seg['segments']}, "
+      f"\"fused_events\": {seg['fused_events']}, "
+      f"\"mean_batch\": {seg['mean_batch']}, "
+      f"\"max_batch\": {seg['max_batch']}")
 fail = False
 if best_warm < RATIO * ref_warm:
     print(f"FAIL: best warm throughput {best_warm:.1f} < "
@@ -125,10 +151,20 @@ if best_cold < RATIO * ref_cold:
     print(f"FAIL: best batched-cold throughput {best_cold:.1f} < "
           f"{RATIO:.0%} of baseline {ref_cold:.1f}")
     fail = True
+# the compiled-vs-scalar warm speedup is a SAME-SESSION ratio, immune to
+# the box's absolute-throughput swings: the compiled replay must never be
+# slower than the scalar interpreter, and must hold CHECK_RATIO of the
+# committed speedup baseline
+floor = max(1.0, RATIO * ref_speedup)
+if best_speedup < floor:
+    print(f"FAIL: compiled warm speedup {best_speedup:.2f}x < "
+          f"{floor:.2f}x (baseline {ref_speedup:.2f}x at ratio {RATIO})")
+    fail = True
 if fail:
     sys.exit(1)
-print(f"OK: warm {best_warm:.1f} and batched cold {best_cold:.1f} both >= "
-      f"{RATIO:.0%} of baselines ({ref_warm:.1f} / {ref_cold:.1f})")
+print(f"OK: warm {best_warm:.1f}, batched cold {best_cold:.1f} >= "
+      f"{RATIO:.0%} of baselines ({ref_warm:.1f} / {ref_cold:.1f}); "
+      f"compiled speedup {best_speedup:.2f}x >= {floor:.2f}x")
 EOF
 }
 

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Nightly regression diff for the engine-throughput artifact.
+
+Compares tonight's ``BENCH_engine.json`` against the previous night's
+(downloaded from the last successful nightly's ``nightly-bench``
+artifact) and fails on throughput regression beyond tolerance.
+
+Unlike the paper-sweep diff (``diff_paper_results.py``), throughput is a
+wall-clock measurement on a shared hosted runner, so the gate is
+one-sided and coarse: a field fails only if tonight's best-of-N rate
+drops below ``(1 - tol) * previous`` (default tol 0.20, i.e. a >20%
+regression).  Improvements and noise-level wobble pass.  The
+within-session ratio fields (``warm_speedup_vs_scalar``,
+``cold_speedup_vs_scalar``, ...) are immune to the runner's
+absolute-throughput swings but not to timing granularity — the
+world-16 cold runs are tens of milliseconds, so their ratios are
+warm-up-dominated — and get their own looser ``--tol-ratio`` (default
+0.35) and are only gated at world sizes >= 64 (the acceptance
+geometries).
+
+Rows are matched on world size; sizes present on only one side are
+notes, not failures (geometry growth is fine; a previous artifact in a
+pre-PR-9 format without the compiled fields just skips those fields).
+Exit codes: 0 clean, 1 regression, 2 usage/IO.  A missing previous
+artifact (first night, expired retention) exits 0 with a note.
+
+Usage::
+
+    python scripts/diff_engine_bench.py PREV.json CURR.json [--tol 0.20]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# best-of-N throughput fields gated one-sidedly (higher is better)
+RATE_FIELDS = (
+    "events_per_sec",
+    "events_per_sec_warm",
+    "events_per_sec_cold",
+    "events_per_sec_cold_batched",
+    "events_per_sec_cold_counter",
+)
+# within-session speedup ratios: box-noise-immune, same one-sided gate,
+# but only at world sizes >= RATIO_MIN_WORLD (smaller geometries finish
+# in tens of milliseconds and their ratios are warm-up artifacts)
+RATIO_FIELDS = (
+    "warm_speedup_vs_scalar",
+    "cold_speedup_vs_scalar",
+    "cold_counter_speedup_vs_scalar",
+)
+RATIO_MIN_WORLD = 64
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("results")
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: expected an engine-bench document "
+                         f"with a 'results' list")
+    return {r["world_size"]: r for r in rows}
+
+
+def diff(prev: dict, curr: dict, *, tol: float, tol_ratio: float):
+    """Returns (failures, notes) as lists of human-readable strings."""
+    failures, notes = [], []
+    for ws in sorted(set(prev) | set(curr)):
+        if ws not in curr:
+            notes.append(f"world {ws}: dropped from tonight's sweep")
+            continue
+        if ws not in prev:
+            notes.append(f"world {ws}: new geometry (no baseline)")
+            continue
+        p, c = prev[ws], curr[ws]
+        for field in RATE_FIELDS + RATIO_FIELDS:
+            if field in RATIO_FIELDS and ws < RATIO_MIN_WORLD:
+                continue
+            t = tol_ratio if field in RATIO_FIELDS else tol
+            pv, cv = p.get(field), c.get(field)
+            if not isinstance(pv, (int, float)) or pv <= 0:
+                notes.append(f"world {ws}: no {field} baseline "
+                             f"(pre-PR-9 artifact?)")
+                continue
+            if not isinstance(cv, (int, float)):
+                failures.append(f"world {ws}: {field} missing from "
+                                f"tonight's artifact")
+                continue
+            if cv < (1.0 - t) * pv:
+                failures.append(
+                    f"world {ws}: {field} regressed {pv:.1f} -> {cv:.1f} "
+                    f"({cv / pv - 1.0:+.1%} < -{t:.0%})")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("prev", help="previous night's BENCH_engine.json")
+    ap.add_argument("curr", help="tonight's BENCH_engine.json")
+    ap.add_argument("--tol", type=float, default=0.20,
+                    help="max relative throughput drop (default 20%%)")
+    ap.add_argument("--tol-ratio", type=float, default=0.35,
+                    help="max relative drop for the within-session "
+                         "speedup-ratio fields (default 35%%: the "
+                         "small-geometry runs are tens of milliseconds, "
+                         "so their ratios wobble harder than the rates)")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.prev):
+        print(f"no previous artifact at {args.prev}: nothing to diff "
+              f"(first night?)")
+        return 0
+    try:
+        prev, curr = _load(args.prev), _load(args.curr)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        return 2
+
+    failures, notes = diff(prev, curr, tol=args.tol,
+                           tol_ratio=args.tol_ratio)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"FAIL: {len(failures)} throughput regression(s) vs "
+              f"{args.prev}:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"OK: {len(curr)} world size(s) within {args.tol:.0%} of "
+          f"{args.prev}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,10 +42,20 @@ import numpy as np
 
 from .channels import ChannelRegistry
 from .models import Extrapolator
-from .pathset import ColdScalars, EngineState
+from .pathset import ColdScalars, EngineState, WarmMirror
 from .policies import Policy
 from .signatures import Signature
 from .stats import KernelStats
+
+# Compiled warm-program opcodes — produced by the runtime's segment
+# compiler (simmpi.runtime._build_warm), consumed by ``Critter.run_warm``.
+# W_CHEAD / W_BHEAD are comp / comp-block entries that additionally head a
+# fused per-rank segment (a maximal run of that rank's computation events
+# between two of its skip-decision / communication boundaries); their
+# member entries stay plain W_COMP / W_BLOCK and are consumed by a pending
+# counter when the head batch-charges the whole segment.
+W_COMP, W_BLOCK, W_CHEAD, W_BHEAD, W_COLL, W_P2P, W_IPOST, W_IMATCH = \
+    range(8)
 
 
 class IterationReport:
@@ -707,7 +717,589 @@ class Critter:
             for r, s in zip(rows.tolist(), cols.tolist()):
                 mean_arr[r, s] = kbar[r][s].mean
 
-    # ------------------------------------------------------------ collectives
+    # -- compiled warm (selective) fast path ----------------------------------
+    #
+    # ``run_warm`` replays a compiled warm program (simmpi.runtime builds it
+    # from the recorded event stream) through list-backed mirrors of the
+    # full engine state (pathset.WarmMirror): the selective hot path is
+    # dominated by scalar skip-table reads and per-rank accumulator
+    # read-modify-writes, which Python lists serve several times cheaper
+    # than NumPy scalar indexing at identical IEEE arithmetic.  Fused
+    # per-rank comp segments batch-charge their predicted means in event
+    # order when every kernel in the segment holds a memoized skip verdict
+    # (the steady state); any guard miss falls back to per-event decisions
+    # at the original program positions, so decisions, statistics updates
+    # and RNG consumption are bit-identical to the scalar interpreter
+    # (tests/test_compiled_path.py, tests/test_cold_path.py).
+
+    def warm_eligible(self) -> bool:
+        """True when ``run_warm`` reproduces the scalar engine exactly.
+
+        The compiled interpreter specializes away the extrapolation
+        branches (every shipped policy has ``extrapolate=False``) and
+        assumes ``global_off`` is populated only under eager propagation —
+        an invariant of the protocol (only ``_aggregate_statistics`` and
+        the eager prior seed add to it) asserted here for safety."""
+        return self.extrapolator is None \
+            and (self._eager or not self.global_off)
+
+    def run_warm(self, warm, sampler, overhead: float = 0.0) -> None:
+        """Replay one compiled warm program (selective, non-forced run)."""
+        S = self.state
+        nlive = len(self._sigs)
+        need = warm.max_sid if warm.max_sid >= nlive else nlive - 1
+        if need >= S.cap:
+            S.ensure(need)
+        wm = WarmMirror(S, nlive)
+
+        # mirror views / resolved traits (locals: closure-cell reads only)
+        clock = wm.clock
+        pe = wm.path_exec
+        pc = wm.path_comp
+        pm = wm.path_comm
+        pk = wm.path_kernels
+        mt = wm.measured_time
+        mcmp = wm.measured_comp
+        ex = wm.executed
+        sk = wm.skipped
+        freq_rows = wm.freq
+        seen_rows = wm.seen
+        iter_rows = wm.iter_exec
+        mean_rows = wm.mean
+        sko_rows = wm.skip_ok
+        goff = wm.goff
+        gmean = wm.gmean
+        sigs = self._sigs
+        kbar = S.kbar
+        update = self.update_stats
+        eager = self._eager
+        once = self._once
+        propagates = self._propagates
+        counts_local = self._counts_local
+        tol = self._tol
+        ms = self._ms
+        vote_frac = self._vote_frac
+        global_off = self.global_off
+        global_stats = self.global_stats
+        note = self._note_stats
+        ap = self.apriori_counts if self._apriori_mode else None
+        apw = ap.shape[1] if ap is not None else 0
+
+        slots = [None] * warm.n_slots
+        pend = [0] * S.n_ranks      # member entries of a batch-charged run
+
+        # -- decision helpers (exact mirrors of the scalar methods) ----------
+
+        def predictable(r, sid):
+            if sko_rows[r][sid]:
+                return True
+            if sid in global_off:
+                return True
+            stats = kbar[r].get(sid)
+            if stats is None or stats.n < ms:
+                return False
+            if counts_local:
+                f = freq_rows[r][sid]
+                if f < 1:
+                    f = 1
+            elif ap is not None:
+                f = int(ap[r, sid]) if sid < apw else 0
+                if f < 1:
+                    f = 1
+            else:
+                f = 1
+            return stats.is_predictable(tol, f, ms)
+
+        def skip_verdict(r, sid):
+            # True means SKIP; memoizes count-1 verdicts into the mirror
+            if sko_rows[r][sid]:
+                return True
+            if once and not iter_rows[r][sid]:
+                return False
+            if not predictable(r, sid):
+                return False
+            stats = kbar[r].get(sid)
+            if stats is not None and stats.n > 0 \
+                    and stats.is_predictable(tol, 1, ms):
+                sko_rows[r][sid] = True
+            return True
+
+        def p2p_vote(r, sid):
+            # callers have already checked sko_rows[r][sid] is False
+            if sid in global_off:
+                return False
+            return not skip_verdict(r, sid)
+
+        if eager:
+            def pmean(r, sid):
+                g = global_stats.get(sid)
+                if g is not None:
+                    return g.mean
+                m = mean_rows[r][sid]
+                return m if m == m else 0.0
+        else:
+            # non-eager protocols never populate global_stats
+            def pmean(r, sid):
+                m = mean_rows[r][sid]
+                return m if m == m else 0.0
+
+        def comp_slow(r, sid):
+            # the memoized fast skip check already failed
+            if eager:
+                execute = True      # goff is False here, never switched off
+            else:
+                execute = not skip_verdict(r, sid)
+            if execute:
+                t = sampler(sigs[sid])
+                if update:
+                    d = kbar[r]
+                    stats = d.get(sid)
+                    if stats is None:
+                        stats = d[sid] = KernelStats()
+                    stats.update(t)
+                    mean_rows[r][sid] = stats.mean
+                    if eager:
+                        note(r, sid, stats)
+                iter_rows[r][sid] = True
+                clock[r] += t
+                mt[r] += t
+                mcmp[r] += t
+                ex[r] += 1
+            else:
+                t = pmean(r, sid)
+                sk[r] += 1
+            pe[r] += t
+            pc[r] += t
+            pk[r] += 1
+            freq_rows[r][sid] += 1
+            seen_rows[r][sid] = True
+
+        def comp_one(r, sid):
+            if eager:
+                if goff[sid]:
+                    t = gmean[sid]
+                else:
+                    comp_slow(r, sid)
+                    return
+            elif sko_rows[r][sid]:
+                t = mean_rows[r][sid]
+            else:
+                comp_slow(r, sid)
+                return
+            sk[r] += 1
+            pe[r] += t
+            pc[r] += t
+            pk[r] += 1
+            freq_rows[r][sid] += 1
+            seen_rows[r][sid] = True
+
+        def block_entry(r, bsids, buniq, bcounts, bn):
+            if eager:
+                ok = True
+                for s in buniq:
+                    if not goff[s]:
+                        ok = False
+                        break
+                mr = gmean
+            else:
+                skr = sko_rows[r]
+                ok = True
+                for s in buniq:
+                    if not skr[s]:
+                        ok = False
+                        break
+                mr = mean_rows[r]
+            if ok:
+                a = pe[r]
+                b = pc[r]
+                for s in bsids:
+                    t = mr[s]
+                    a += t
+                    b += t
+                pe[r] = a
+                pc[r] = b
+                pk[r] += bn
+                sk[r] += bn
+                fr = freq_rows[r]
+                sr = seen_rows[r]
+                for s, c in zip(buniq, bcounts):
+                    fr[s] += c
+                    sr[s] = True
+                return True
+            for s in bsids:
+                comp_one(r, s)
+            return False
+
+        def coll_vote(ranks, sid):
+            all_ok = True
+            for r in ranks:
+                if not sko_rows[r][sid]:
+                    all_ok = False
+                    break
+            if all_ok:
+                return False
+            if once:
+                for r in ranks:
+                    if not iter_rows[r][sid]:
+                        return True
+            thr = vote_frac * len(ranks)
+            n_pred = 0
+            left = len(ranks)
+            for r in ranks:
+                left -= 1
+                if predictable(r, sid):
+                    n_pred += 1
+                    if n_pred >= thr:
+                        break
+                elif n_pred + left < thr:
+                    return True
+            if n_pred < thr:
+                return True
+            if vote_frac >= 1.0:
+                for r in ranks:
+                    stats = kbar[r].get(sid)
+                    if stats is not None and stats.n > 0 \
+                            and stats.is_predictable(tol, 1, ms):
+                        sko_rows[r][sid] = True
+            return False
+
+        # -- interpreter loop -------------------------------------------------
+
+        for e in warm.entries:
+            k = e[0]
+            if k == W_COMP:
+                r = e[1]
+                if pend[r]:
+                    pend[r] -= 1
+                    continue
+                sid = e[2]
+                if eager:
+                    if not goff[sid]:
+                        comp_slow(r, sid)
+                        continue
+                    t = gmean[sid]
+                elif sko_rows[r][sid]:
+                    t = mean_rows[r][sid]
+                else:
+                    comp_slow(r, sid)
+                    continue
+                sk[r] += 1
+                pe[r] += t
+                pc[r] += t
+                pk[r] += 1
+                freq_rows[r][sid] += 1
+                seen_rows[r][sid] = True
+            elif k == W_IMATCH:
+                _, src, dst, sid, slot, sig = e
+                vote, p_exec, p_comp, p_comm, p_kc, post_freqs, post_clock \
+                    = slots[slot]
+                if vote:
+                    execute = True
+                elif sko_rows[dst][sid]:
+                    execute = False
+                else:
+                    execute = p2p_vote(dst, sid)
+                if p_exec > pe[dst]:
+                    if post_freqs is not None:
+                        fd = freq_rows[dst]
+                        sd = seen_rows[dst]
+                        i = 0
+                        for v in post_freqs:
+                            if v > 0:
+                                fd[i] = v
+                                sd[i] = True
+                            i += 1
+                    pe[dst] = p_exec
+                    pc[dst] = p_comp
+                    pm[dst] = p_comm
+                    pk[dst] = p_kc
+                cd = clock[dst]
+                base = (post_clock if post_clock > cd else cd) + overhead
+                if execute:
+                    t = sampler(sig)
+                    for r in (src, dst):
+                        if update:
+                            d = kbar[r]
+                            stats = d.get(sid)
+                            if stats is None:
+                                stats = d[sid] = KernelStats()
+                            stats.update(t)
+                            mean_rows[r][sid] = stats.mean
+                            sko_rows[r][sid] = False
+                            if eager:
+                                note(r, sid, stats)
+                        iter_rows[r][sid] = True
+                        ex[r] += 1
+                    mt[dst] += t
+                    clock[dst] = base + t
+                else:
+                    sk[src] += 1
+                    sk[dst] += 1
+                    if eager:
+                        t = pmean(dst, sid)
+                    else:
+                        t = mean_rows[dst][sid]
+                        if t != t:               # NaN: no statistics yet
+                            t = 0.0
+                    clock[dst] = base
+                pe[dst] += t
+                pm[dst] += t
+                pk[dst] += 1
+                freq_rows[dst][sid] += 1
+                seen_rows[dst][sid] = True
+            elif k == W_IPOST:
+                _, r, sid, slot = e
+                if sko_rows[r][sid]:
+                    vote = False
+                else:
+                    vote = p2p_vote(r, sid)
+                slots[slot] = (vote, pe[r], pc[r], pm[r], pk[r],
+                               freq_rows[r][:] if propagates else None,
+                               clock[r])
+            elif k == W_CHEAD:
+                r = e[1]
+                run = e[3]
+                rsids, runiq, rcounts, rn, extra = run
+                if eager:
+                    ok = True
+                    for s in runiq:
+                        if not goff[s]:
+                            ok = False
+                            break
+                    mr = gmean
+                else:
+                    skr = sko_rows[r]
+                    ok = True
+                    for s in runiq:
+                        if not skr[s]:
+                            ok = False
+                            break
+                    mr = mean_rows[r]
+                if ok:
+                    a = pe[r]
+                    b = pc[r]
+                    for s in rsids:
+                        t = mr[s]
+                        a += t
+                        b += t
+                    pe[r] = a
+                    pc[r] = b
+                    pk[r] += rn
+                    sk[r] += rn
+                    fr = freq_rows[r]
+                    sr = seen_rows[r]
+                    for s, c in zip(runiq, rcounts):
+                        fr[s] += c
+                        sr[s] = True
+                    pend[r] = extra
+                else:
+                    comp_one(r, e[2])
+            elif k == W_BLOCK:
+                r = e[1]
+                if pend[r]:
+                    pend[r] -= 1
+                    continue
+                block_entry(r, e[2], e[3], e[4], e[5])
+            elif k == W_BHEAD:
+                r = e[1]
+                rsids, runiq, rcounts, rn, extra = e[6]
+                if eager:
+                    ok = True
+                    for s in runiq:
+                        if not goff[s]:
+                            ok = False
+                            break
+                    mr = gmean
+                else:
+                    skr = sko_rows[r]
+                    ok = True
+                    for s in runiq:
+                        if not skr[s]:
+                            ok = False
+                            break
+                    mr = mean_rows[r]
+                if ok:
+                    a = pe[r]
+                    b = pc[r]
+                    for s in rsids:
+                        t = mr[s]
+                        a += t
+                        b += t
+                    pe[r] = a
+                    pc[r] = b
+                    pk[r] += rn
+                    sk[r] += rn
+                    fr = freq_rows[r]
+                    sr = seen_rows[r]
+                    for s, c in zip(runiq, rcounts):
+                        fr[s] += c
+                        sr[s] = True
+                    pend[r] = extra
+                else:
+                    block_entry(r, e[2], e[3], e[4], e[5])
+            elif k == W_P2P:
+                src = e[1]
+                dst = e[2]
+                sid = e[3]
+                if sko_rows[src][sid]:
+                    vote = False
+                else:
+                    vote = p2p_vote(src, sid)
+                if vote:
+                    execute = True
+                elif sko_rows[dst][sid]:
+                    execute = False
+                else:
+                    execute = p2p_vote(dst, sid)
+                if pe[src] > pe[dst]:
+                    w = src
+                    l = dst
+                else:
+                    w = dst
+                    l = src
+                if propagates:
+                    ws = seen_rows[w]
+                    fw = freq_rows[w]
+                    fl = freq_rows[l]
+                    sl = seen_rows[l]
+                    i = 0
+                    for flag in ws:
+                        if flag:
+                            fl[i] = fw[i]
+                            sl[i] = True
+                        i += 1
+                pe[l] = pe[w]
+                pc[l] = pc[w]
+                pm[l] = pm[w]
+                pk[l] = pk[w]
+                a = clock[src]
+                b = clock[dst]
+                base = (a if a > b else b) + overhead
+                if execute:
+                    t = sampler(e[4])
+                    done = base + t
+                    for r in (src, dst):
+                        if update:
+                            d = kbar[r]
+                            stats = d.get(sid)
+                            if stats is None:
+                                stats = d[sid] = KernelStats()
+                            stats.update(t)
+                            mean_rows[r][sid] = stats.mean
+                            sko_rows[r][sid] = False
+                            if eager:
+                                note(r, sid, stats)
+                        iter_rows[r][sid] = True
+                        mt[r] += t
+                        ex[r] += 1
+                        pe[r] += t
+                        pm[r] += t
+                        pk[r] += 1
+                        freq_rows[r][sid] += 1
+                        seen_rows[r][sid] = True
+                else:
+                    done = base
+                    for r in (src, dst):
+                        sk[r] += 1
+                        t = pmean(r, sid)
+                        pe[r] += t
+                        pm[r] += t
+                        pk[r] += 1
+                        freq_rows[r][sid] += 1
+                        seen_rows[r][sid] = True
+                clock[src] = done
+                clock[dst] = done
+            else:                           # W_COLL
+                sid = e[1]
+                comm = e[2]
+                ranks = e[3]
+                # longest path wins (first max, matching argmax)
+                w = ranks[0]
+                best = pe[w]
+                max_clock = clock[w]
+                for r in ranks:
+                    v = pe[r]
+                    if v > best:
+                        best = v
+                        w = r
+                    c = clock[r]
+                    if c > max_clock:
+                        max_clock = c
+                if propagates:
+                    ws = seen_rows[w]
+                    fw = freq_rows[w]
+                    for r in ranks:
+                        if r == w:
+                            continue
+                        fr = freq_rows[r]
+                        sr = seen_rows[r]
+                        i = 0
+                        for flag in ws:
+                            if flag:
+                                fr[i] = fw[i]
+                                sr[i] = True
+                            i += 1
+                wpe = pe[w]
+                wpc = pc[w]
+                wpm = pm[w]
+                wpk = pk[w]
+                for r in ranks:
+                    pe[r] = wpe
+                    pc[r] = wpc
+                    pm[r] = wpm
+                    pk[r] = wpk
+                if eager:
+                    execute = not goff[sid]
+                else:
+                    execute = coll_vote(ranks, sid)
+                max_clock += overhead
+                if execute:
+                    t = sampler(e[4])
+                    new_clock = max_clock + t
+                    for r in ranks:
+                        if update:
+                            d = kbar[r]
+                            stats = d.get(sid)
+                            if stats is None:
+                                stats = d[sid] = KernelStats()
+                            stats.update(t)
+                            mean_rows[r][sid] = stats.mean
+                            if eager:
+                                note(r, sid, stats)
+                            sko_rows[r][sid] = False
+                        iter_rows[r][sid] = True
+                        clock[r] = new_clock
+                        mt[r] += t
+                        ex[r] += 1
+                        pe[r] += t
+                        pm[r] += t
+                        pk[r] += 1
+                        freq_rows[r][sid] += 1
+                        seen_rows[r][sid] = True
+                else:
+                    for r in ranks:
+                        t = pmean(r, sid)
+                        clock[r] = max_clock
+                        sk[r] += 1
+                        pe[r] += t
+                        pm[r] += t
+                        pk[r] += 1
+                        freq_rows[r][sid] += 1
+                        seen_rows[r][sid] = True
+                if eager and comm.channel is not None:
+                    # aggregation reads K-bar/pred_live (live objects) and
+                    # writes the prediction ARRAYS; sync the participants'
+                    # mirror rows around it and re-pull the global tables
+                    for r in ranks:
+                        wm.push_rank(S, r)
+                    self._aggregate_statistics(comm)
+                    for r in ranks:
+                        wm.pull_rank(S, r)
+                    wm.pull_global(S)
+                    goff = wm.goff
+                    gmean = wm.gmean
+
+        wm.writeback(S)
 
     def on_coll(self, sid: int, comm, sampler, overhead: float = 0.0) -> float:
         """Blocking-collective interception (Figure 2, MPI_Bcast et al.).

@@ -212,3 +212,87 @@ class ColdScalars:
         S.measured_time[:] = self.measured_time
         S.measured_comp[:] = self.measured_comp
         S.executed[:] = self.executed
+
+
+class WarmMirror:
+    """List-backed mirrors of the full engine state for one compiled
+    (warm, selective) replay — ``ColdScalars`` extended to the per-
+    (rank, sid) tables.
+
+    The compiled warm interpreter (``Critter.run_warm``) is dominated by
+    scalar reads of ``skip_ok``/``mean_arr``/``goff``/``gmean`` and scalar
+    read-modify-writes of ``freq``/``seen`` and the per-rank accumulators;
+    Python lists make each of those several times cheaper than NumPy
+    scalar indexing while keeping the arithmetic value-identical (IEEE
+    double adds, int increments, bool stores).  Rows are truncated to
+    ``nlive`` — the number of interned signatures when the replay starts —
+    which covers every sid the recorded program can touch; columns at or
+    beyond ``nlive`` are provably untouched and keep their array values.
+
+    ``goff``/``gmean`` are read-only snapshots refreshed by the caller
+    after eager aggregation (which writes the arrays directly); they are
+    not written back.
+    """
+
+    __slots__ = ("nlive", "clock", "path_exec", "path_comp", "path_comm",
+                 "path_kernels", "measured_time", "measured_comp",
+                 "executed", "skipped", "freq", "seen", "iter_exec",
+                 "mean", "skip_ok", "goff", "gmean")
+
+    def __init__(self, S: EngineState, nlive: int):
+        self.nlive = nlive
+        self.clock = S.clock.tolist()
+        self.path_exec = S.path_exec.tolist()
+        self.path_comp = S.path_comp.tolist()
+        self.path_comm = S.path_comm.tolist()
+        self.path_kernels = S.path_kernels.tolist()
+        self.measured_time = S.measured_time.tolist()
+        self.measured_comp = S.measured_comp.tolist()
+        self.executed = S.executed.tolist()
+        self.skipped = S.skipped.tolist()
+        self.freq = S.freq[:, :nlive].tolist()
+        self.seen = S.seen[:, :nlive].tolist()
+        self.iter_exec = S.iter_exec[:, :nlive].tolist()
+        self.mean = S.mean_arr[:, :nlive].tolist()
+        self.skip_ok = S.skip_ok[:, :nlive].tolist()
+        self.goff = S.goff[:nlive].tolist()
+        self.gmean = S.gmean[:nlive].tolist()
+
+    def pull_rank(self, S: EngineState, r: int) -> None:
+        """Re-snapshot one rank's prediction rows after an external write
+        (eager aggregation updates ``mean_arr``/``skip_ok`` in place)."""
+        n = self.nlive
+        self.mean[r] = S.mean_arr[r, :n].tolist()
+        self.skip_ok[r] = S.skip_ok[r, :n].tolist()
+
+    def pull_global(self, S: EngineState) -> None:
+        n = self.nlive
+        self.goff = S.goff[:n].tolist()
+        self.gmean = S.gmean[:n].tolist()
+
+    def push_rank(self, S: EngineState, r: int) -> None:
+        """Write one rank's rows back before an external reader (eager
+        aggregation reads ``mean_arr`` via KernelStats, and writes must
+        land on current values)."""
+        n = self.nlive
+        if n:
+            S.mean_arr[r, :n] = self.mean[r]
+            S.skip_ok[r, :n] = self.skip_ok[r]
+
+    def writeback(self, S: EngineState) -> None:
+        S.clock[:] = self.clock
+        S.path_exec[:] = self.path_exec
+        S.path_comp[:] = self.path_comp
+        S.path_comm[:] = self.path_comm
+        S.path_kernels[:] = self.path_kernels
+        S.measured_time[:] = self.measured_time
+        S.measured_comp[:] = self.measured_comp
+        S.executed[:] = self.executed
+        S.skipped[:] = self.skipped
+        n = self.nlive
+        if n:
+            S.freq[:, :n] = self.freq
+            S.seen[:, :n] = self.seen
+            S.iter_exec[:, :n] = self.iter_exec
+            S.mean_arr[:, :n] = self.mean
+            S.skip_ok[:, :n] = self.skip_ok

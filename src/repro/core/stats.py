@@ -20,6 +20,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Optional
 
+import numpy as np
+
 # 95% two-sided normal quantile. The paper constructs 95% confidence
 # intervals from the scaled sample variance; for very small n we widen via a
 # small-sample t-style correction table (indexed by dof) so that 2-3 samples
@@ -40,6 +42,56 @@ def t_quantile_975(dof: int) -> float:
     if dof <= len(_T_975):
         return _T_975[dof - 1]
     return Z_95
+
+
+# Acklam's rational approximation of the standard-normal inverse CDF
+# (~1.15e-9 absolute error).  The counter-based RNG discipline in
+# simmpi.costmodel maps uniform counters to normal deviates through this
+# function; it is vectorized so a whole segment's draws evaluate in one
+# ufunc pass, and the scalar path evaluates the SAME ufuncs on length-1
+# arrays so per-event and per-segment draws are bitwise identical.
+_PPF_A = (-3.969683028665376e+01, 2.209460984245205e+02,
+          -2.759285104469687e+02, 1.383577518672690e+02,
+          -3.066479806614716e+01, 2.506628277459239e+00)
+_PPF_B = (-5.447609879822406e+01, 1.615858368580409e+02,
+          -1.556989798598866e+02, 6.680131188771972e+01,
+          -1.328068155288572e+01)
+_PPF_C = (-7.784894002430293e-03, -3.223964580411365e-01,
+          -2.400758277161838e+00, -2.549732539343734e+00,
+          4.374664141464968e+00, 2.938163982698783e+00)
+_PPF_D = (7.784695709041462e-03, 3.224671290700398e-01,
+          2.445134137142996e+00, 3.754408661907416e+00)
+_PPF_LO = 0.02425
+
+
+def norm_ppf(q: "np.ndarray") -> "np.ndarray":
+    """Vectorized standard-normal quantile function on ``q`` in (0, 1)."""
+    q = np.asarray(q, dtype=np.float64)
+    out = np.empty_like(q)
+    a, b, c, d = _PPF_A, _PPF_B, _PPF_C, _PPF_D
+    low = q < _PPF_LO
+    high = q > 1.0 - _PPF_LO
+    mid = ~(low | high)
+    if low.any():
+        u = np.sqrt(-2.0 * np.log(q[low]))
+        out[low] = ((((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u
+                      + c[4]) * u + c[5])
+                    / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u
+                       + 1.0))
+    if high.any():
+        u = np.sqrt(-2.0 * np.log(1.0 - q[high]))
+        out[high] = -((((((c[0] * u + c[1]) * u + c[2]) * u + c[3]) * u
+                        + c[4]) * u + c[5])
+                      / ((((d[0] * u + d[1]) * u + d[2]) * u + d[3]) * u
+                         + 1.0))
+    if mid.any():
+        u = q[mid] - 0.5
+        r = u * u
+        out[mid] = ((((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r
+                      + a[4]) * r + a[5]) * u
+                    / (((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r
+                        + b[4]) * r + 1.0))
+    return out
 
 
 @dataclass

@@ -26,6 +26,36 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.signatures import Signature, flops_of, bytes_of
+from repro.core.stats import norm_ppf
+
+
+# -- counter-based (Philox-style) draw discipline -----------------------------
+#
+# splitmix64 finalizer constants: the i-th draw of a model keyed by ``key``
+# is ``mix64(key + (i + 1) * GAMMA)``, so any contiguous run of draw slots
+# can be generated as one vectorized pass over ``arange`` — there is no
+# sequential generator state to thread through, only the cursor
+# ``draw_index``.  That is what lets a straggler-enabled cost model batch
+# its mixed normal/uniform draws per segment: each event owns THREE fixed
+# counter slots (normal, straggler gate, straggler scale), consumed
+# positionally whether or not the straggler branch fires.
+_MIX_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX_M2 = np.uint64(0x94D049BB133111EB)
+_U64_TO_UNIT = 2.0 ** -53      # (z >> 11) + 0.5 in (0, 1), never 0 or 1
+
+
+def counter_uniforms(key: np.uint64, start: int, n: int) -> np.ndarray:
+    """Uniform(0,1) deviates for counter slots [start, start + n)."""
+    with np.errstate(over="ignore"):
+        z = (np.arange(start + 1, start + n + 1, dtype=np.uint64)
+             * _MIX_GAMMA + key)
+        z ^= z >> np.uint64(30)
+        z *= _MIX_M1
+        z ^= z >> np.uint64(27)
+        z *= _MIX_M2
+        z ^= z >> np.uint64(31)
+    return ((z >> np.uint64(11)).astype(np.float64) + 0.5) * _U64_TO_UNIT
 
 
 @dataclass(frozen=True)
@@ -80,7 +110,8 @@ class CostModel:
     def __init__(self, spec: MachineSpec, *, allocation: int = 0,
                  noise: float = 0.08, comm_noise: float = 0.18,
                  bias_sigma: float = 0.06, straggler_p: float = 0.002,
-                 straggler_scale: float = 4.0, seed: int = 0):
+                 straggler_scale: float = 4.0, seed: int = 0,
+                 counter_rng: bool = False):
         self.spec = spec
         self.noise = noise
         self.comm_noise = comm_noise
@@ -93,6 +124,18 @@ class CostModel:
         # (both factors are pure in sig), so the per-sample cost is one dict
         # lookup plus the stochastic draw
         self._det: Dict[Signature, float] = {}
+        # counter-based draw discipline (opt-in: the legacy sequential
+        # Generator stream keeps every committed golden/report valid).
+        # ``draw_index`` is the public RNG-stream cursor — the counter-mode
+        # analogue of Generator.bit_generator.state, pinned by the
+        # bit-identity gates.
+        self.counter_rng = bool(counter_rng)
+        self.draw_index = 0
+        with np.errstate(over="ignore"):
+            self._ctr_key = (np.uint64(seed & 0xFFFFFFFFFFFFFFFF)
+                             * np.uint64(0x2545F4914F6CDD1D)
+                             + np.uint64((allocation * 7919 + 1)
+                                         & 0xFFFFFFFFFFFFFFFF))
 
     # -- deterministic part --------------------------------------------------
 
@@ -155,8 +198,11 @@ class CostModel:
         stragglers on (each event draws normal + uniform(s), a
         data-dependent interleaving no vector call reproduces) returns
         ``None`` and the engine falls back to per-event scalar ``sample``
-        calls, which preserve the stream by construction."""
-        if self.straggler_p > 0 or not sigs:
+        calls, which preserve the stream by construction.  Counter-mode
+        models return ``None`` here too: their stream lives on the
+        ``draw_index`` cursor, and the engine batches them through
+        ``sample_block`` instead (which handles stragglers)."""
+        if self.counter_rng or self.straggler_p > 0 or not sigs:
             return None
         det_cache = self._det
         n = len(sigs)
@@ -178,7 +224,54 @@ class CostModel:
             det = self.base_time(sig) * self._bias_of(sig)
             self._det[sig] = det
         sigma = self.comm_noise if sig.kind == "comm" else self.noise
+        if self.counter_rng:
+            # counter discipline: 3 fixed slots per event; the scalar path
+            # computes through the SAME vectorized ufuncs (on length-1
+            # arrays) as sample_block, so a segment drawn in one pass is
+            # bitwise identical to per-event draws
+            i = self.draw_index
+            self.draw_index = i + 3
+            u = counter_uniforms(self._ctr_key, i, 3)
+            t = det * float(np.exp(sigma * norm_ppf(u[0:1])[0]))
+            if self.straggler_p > 0 and u[1] < self.straggler_p:
+                t *= 1.0 + float(u[2]) * self.straggler_scale
+            return t
         t = det * float(np.exp(rng.normal(0.0, sigma)))
         if self.straggler_p > 0 and rng.random() < self.straggler_p:
             t *= 1.0 + rng.random() * self.straggler_scale
+        return t
+
+    def sample_block(self, sigs) -> Optional[np.ndarray]:
+        """Draw one time per signature in a single vectorized pass.
+
+        Only available in counter mode (returns ``None`` otherwise, and the
+        engine falls back to ``batch_info`` / per-event ``sample``).  Unlike
+        ``batch_info`` this handles straggler-enabled models too: every
+        event owns 3 positional counter slots regardless of whether its
+        straggler branch fires, so the block draw consumes exactly the
+        counters the equivalent per-event ``sample`` calls would — same
+        cursor advance, bitwise-identical times."""
+        if not self.counter_rng or not sigs:
+            return None
+        det_cache = self._det
+        n = len(sigs)
+        det = np.empty(n)
+        sigma = np.empty(n)
+        comm_noise, noise = self.comm_noise, self.noise
+        for i, sig in enumerate(sigs):
+            d = det_cache.get(sig)
+            if d is None:
+                d = self.base_time(sig) * self._bias_of(sig)
+                det_cache[sig] = d
+            det[i] = d
+            sigma[i] = comm_noise if sig.kind == "comm" else noise
+        i = self.draw_index
+        self.draw_index = i + 3 * n
+        u = counter_uniforms(self._ctr_key, i, 3 * n).reshape(n, 3)
+        t = det * np.exp(sigma * norm_ppf(u[:, 0]))
+        p = self.straggler_p
+        if p > 0:
+            mask = u[:, 1] < p
+            if mask.any():
+                t[mask] *= 1.0 + u[mask, 2] * self.straggler_scale
         return t

@@ -18,6 +18,23 @@ COLL_OPS = (
 # extra bookkeeping) flow through the engine unchanged.
 KIND_COMP, KIND_COLL, KIND_SEND, KIND_RECV, KIND_ISEND, KIND_WAIT = range(6)
 
+# Compiled-program dispatch codes.  The recording pass lowers the op stream
+# into three progressively specialized programs, each dispatching on the
+# first element of its entry tuples (all defined here, next to the op-kind
+# codes they descend from):
+#
+# EV_* — the flat event program emitted by the structural recording pass
+#        (one entry per interception; comp runs fused into EV_BLOCKs);
+# CS_* — the cold program: the event program re-sliced for batched forced
+#        execution (static draw sequence, force-specialized interceptions);
+# W_*  — the warm program (see core.critter): the event program segmented
+#        at skip-decision and communication boundaries for the compiled
+#        selective interpreter (per-rank comp segments batch-charge when
+#        fully in the skip regime).  W_* codes live in core.critter next
+#        to their interpreter — core must not import simmpi.
+EV_COMP, EV_BLOCK, EV_COLL, EV_P2P, EV_IPOST, EV_IMATCH = range(6)
+CS_COMP, CS_BLOCK, CS_IPOST, CS_COLL, CS_P2P, CS_IMATCH = range(6)
+
 
 class Comp:
     """A local computation kernel: a routine with a particular input size.

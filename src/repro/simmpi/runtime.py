@@ -70,10 +70,14 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.critter import Critter, IterationReport
+from repro.core.critter import (Critter, IterationReport, W_BHEAD, W_BLOCK,
+                                W_CHEAD, W_COLL, W_COMP, W_IMATCH, W_IPOST,
+                                W_P2P)
 from repro.core.signatures import Signature, comm_sig, comp_sig, p2p_sig
 from .comm import World
-from .ops import (KIND_COLL, KIND_COMP, KIND_ISEND, KIND_RECV, KIND_SEND,
+from .ops import (CS_BLOCK, CS_COLL, CS_COMP, CS_IMATCH, CS_IPOST, CS_P2P,
+                  EV_BLOCK, EV_COLL, EV_COMP, EV_IMATCH, EV_IPOST, EV_P2P,
+                  KIND_COLL, KIND_COMP, KIND_ISEND, KIND_RECV, KIND_SEND,
                   KIND_WAIT)
 
 RUNNABLE, BLOCKED, DONE = 0, 1, 2
@@ -128,27 +132,48 @@ class _CompBlock:
 # overhead exceeds the per-op savings)
 _MIN_BLOCK = 4
 
-# event-program opcodes (first element of each event tuple)
-EV_COMP, EV_BLOCK, EV_COLL, EV_P2P, EV_IPOST, EV_IMATCH = range(6)
-
-# cold-program step opcodes
-CS_COMP, CS_BLOCK, CS_IPOST, CS_COLL, CS_P2P, CS_IMATCH = range(6)
-
 
 class _EventProgram:
     """The flat interception sequence of one configuration run.
 
-    events -- list of opcode tuples (see the EV_* constants)
+    events -- list of opcode tuples (see the EV_*/CS_* constants in .ops)
     n_slots -- number of isend post->match payload slots
     cold -- lazily-built batched cold-run program (_ColdProgram)
+    warm -- lazily-built compiled warm program (_WarmProgram)
     """
 
-    __slots__ = ("events", "n_slots", "cold")
+    __slots__ = ("events", "n_slots", "cold", "warm")
 
     def __init__(self, events, n_slots):
         self.events = events
         self.n_slots = n_slots
         self.cold: Optional[_ColdProgram] = None
+        self.warm: Optional[_WarmProgram] = None
+
+
+class _WarmProgram:
+    """The event program segmented for the compiled selective interpreter
+    (``Critter.run_warm``).
+
+    entries -- list of W_* opcode tuples (see core.critter): one entry per
+             interception, with each maximal per-rank run of computation
+             events between that rank's skip-decision / communication
+             boundaries marked by a W_CHEAD / W_BHEAD head entry carrying
+             the segment metadata ``(sids, uniq, counts, n_events,
+             n_member_entries)``
+    n_slots -- isend post->match payload slots (same as the event program)
+    max_sid -- highest signature id any entry touches (pre-grow capacity)
+    meta -- segmentation statistics for the bench harness / CI gate:
+             segment count, fused event count, batch-size distribution
+    """
+
+    __slots__ = ("entries", "n_slots", "max_sid", "meta")
+
+    def __init__(self, entries, n_slots, max_sid, meta):
+        self.entries = entries
+        self.n_slots = n_slots
+        self.max_sid = max_sid
+        self.meta = meta
 
 
 class _ColdProgram:
@@ -210,12 +235,17 @@ class Runtime:
     def __init__(self, world: World, critter: Critter,
                  timer: Callable[[Signature, np.random.Generator], float],
                  *, seed: int = 0, overhead: float = 1e-6,
-                 trace_cache: bool = True):
+                 trace_cache: bool = True, compiled: bool = True):
         self.world = world
         self.critter = critter
         self.timer = timer
         self.overhead = overhead
         self.trace_cache = trace_cache
+        # compiled selective replay (Critter.run_warm over the segmented
+        # warm program).  Bit-identical to the plain event interpreter;
+        # ``compiled=False`` forces the scalar warm path (the bench harness
+        # measures the compiled speedup against it)
+        self.compiled = compiled
         self._rng = np.random.default_rng(seed)
         self._intern = world.interner.intern
         self._sig_cache: Dict[tuple, int] = {}
@@ -223,8 +253,13 @@ class Runtime:
         # method of an object exposing ``batch_info(sigs) -> (det, sigma)
         # | None`` (CostModel); anything else falls back to per-event
         # scalar draws, which preserve the RNG stream by construction
-        self._batch_info = getattr(getattr(timer, "__self__", None),
-                                   "batch_info", None)
+        timer_obj = getattr(timer, "__self__", None)
+        self._batch_info = getattr(timer_obj, "batch_info", None)
+        # counter-RNG batched sampling (CostModel.sample_block): vectorizes
+        # the whole draw sequence even with the straggler branch on — the
+        # counter discipline gives every event fixed draw slots, so there
+        # is no scalar fallback left to pay
+        self._sample_block = getattr(timer_obj, "sample_block", None)
         # program_factory -> per-rank recorded op traces (weak: traces die
         # with the configuration's program factory)
         self._traces = weakref.WeakKeyDictionary()
@@ -509,6 +544,140 @@ class Runtime:
         return _ColdProgram(steps, draw_sigs, prog.n_slots, max_sid,
                             exec_pairs)
 
+    def _build_warm(self, prog: _EventProgram) -> _WarmProgram:
+        """Segment the event program for the compiled selective interpreter.
+
+        Every maximal run of one rank's computation events (plain comps AND
+        fused blocks) between two of that rank's *boundaries* — any event
+        that touches the rank: a collective it participates in, a p2p it
+        sends or receives, an isend post or match — becomes one segment.
+        Within a segment no event of any other rank can observe the rank's
+        comp-charged state (only boundary events read it), so when every
+        kernel in the segment holds a memoized skip verdict the interpreter
+        charges the whole segment at the head entry and consumes the member
+        entries with a pending counter — the steady-state path that turns
+        per-event interpretation into one accumulation loop per segment.
+        A guard miss replays the members individually at their original
+        positions, so decisions and RNG consumption never reorder."""
+        sigs = self.world.interner.sigs
+        entries: list = []
+        # rank -> [entry indices, sids] of its currently-open comp run
+        open_runs: Dict[int, list] = {}
+        max_sid = 0
+        run_sizes: List[int] = []
+        n_comp = n_block = n_coll = n_p2p = n_ipost = n_imatch = 0
+
+        def close(r):
+            run = open_runs.pop(r, None)
+            if run is None:
+                return
+            idxs, rsids = run
+            if len(idxs) < 2:
+                return           # single-entry segment: no head needed
+            uniq: Dict[int, int] = {}
+            for s in rsids:
+                uniq[s] = uniq.get(s, 0) + 1
+            meta = (rsids, list(uniq), list(uniq.values()), len(rsids),
+                    len(idxs) - 1)
+            head = entries[idxs[0]]
+            if head[0] == W_COMP:
+                entries[idxs[0]] = (W_CHEAD, head[1], head[2], meta)
+            else:
+                entries[idxs[0]] = (W_BHEAD, head[1], head[2], head[3],
+                                    head[4], head[5], meta)
+            run_sizes.append(len(rsids))
+
+        for ev in prog.events:
+            k = ev[0]
+            if k == EV_COMP:
+                r = ev[1]
+                sid = ev[2]
+                if sid > max_sid:
+                    max_sid = sid
+                run = open_runs.get(r)
+                if run is None:
+                    run = open_runs[r] = [[], []]
+                run[0].append(len(entries))
+                run[1].append(sid)
+                entries.append((W_COMP, r, sid))
+                n_comp += 1
+            elif k == EV_BLOCK:
+                r = ev[1]
+                block = ev[2]
+                if block.max_sid > max_sid:
+                    max_sid = block.max_sid
+                run = open_runs.get(r)
+                if run is None:
+                    run = open_runs[r] = [[], []]
+                run[0].append(len(entries))
+                run[1].extend(block.sids)
+                entries.append((W_BLOCK, r, block.sids, block.uniq.tolist(),
+                                block.counts.tolist(), block.n))
+                n_block += 1
+            elif k == EV_IPOST:
+                r = ev[1]
+                sid = ev[2]
+                if sid > max_sid:
+                    max_sid = sid
+                close(r)
+                entries.append((W_IPOST, r, sid, ev[3]))
+                n_ipost += 1
+            elif k == EV_COLL:
+                sid = ev[1]
+                comm = ev[2]
+                if sid > max_sid:
+                    max_sid = sid
+                for r in comm.ranks:
+                    close(r)
+                entries.append((W_COLL, sid, comm, comm.ranks, sigs[sid]))
+                n_coll += 1
+            elif k == EV_P2P:
+                sid = ev[3]
+                if sid > max_sid:
+                    max_sid = sid
+                close(ev[1])
+                close(ev[2])
+                entries.append((W_P2P, ev[1], ev[2], sid, sigs[sid]))
+                n_p2p += 1
+            else:                               # EV_IMATCH
+                sid = ev[3]
+                if sid > max_sid:
+                    max_sid = sid
+                close(ev[1])
+                close(ev[2])
+                entries.append((W_IMATCH, ev[1], ev[2], sid, ev[4],
+                                sigs[sid]))
+                n_imatch += 1
+        for r in list(open_runs):
+            close(r)
+
+        fused = sum(run_sizes)
+        meta = {
+            "entries": len(entries),
+            "segments": len(run_sizes),
+            "fused_events": fused,
+            "max_batch": max(run_sizes) if run_sizes else 0,
+            "mean_batch": round(fused / len(run_sizes), 2)
+            if run_sizes else 0.0,
+            "comp_entries": n_comp,
+            "block_entries": n_block,
+            "coll_entries": n_coll,
+            "p2p_entries": n_p2p,
+            "ipost_entries": n_ipost,
+            "imatch_entries": n_imatch,
+        }
+        return _WarmProgram(entries, prog.n_slots, max_sid, meta)
+
+    def warm_meta(self, program_factory) -> dict:
+        """Segmentation statistics of the compiled warm program for
+        ``program_factory`` (recording + compiling it if needed) — consumed
+        by the bench harness and the CI engine gate."""
+        prog = self._get_program(program_factory)
+        warm = prog.warm
+        if warm is None:
+            warm = prog.warm = self._build_warm(prog)
+        return dict(warm.meta)
+
     # -- interpreters ---------------------------------------------------------
 
     def _run_events(self, prog: _EventProgram, sampler) -> None:
@@ -571,20 +740,28 @@ class Runtime:
         isend_snapshot_cold = critter.isend_snapshot_cold
         slots: List[Optional[tuple]] = [None] * cold.n_slots
 
-        info = cold.batch
-        if info is None:
-            info = False
-            if self._batch_info is not None and cold.draw_sigs:
-                bi = self._batch_info(cold.draw_sigs)
-                if bi is not None:
-                    info = bi
-            cold.batch = info
-        if info is False:
-            ts = None
-        else:
-            det, sigma = info
-            ts = (det * np.exp(
-                sigma * rng.standard_normal(len(det)))).tolist()
+        ts = None
+        if self._sample_block is not None and cold.draw_sigs:
+            # counter-RNG batching: the whole draw sequence — stragglers
+            # included — in one vectorized pass (no cache: the draw cursor
+            # advances per run).  None when the model is not in counter
+            # mode; fall through to the legacy batch/scalar paths.
+            drawn = self._sample_block(cold.draw_sigs)
+            if drawn is not None:
+                ts = drawn.tolist()
+        if ts is None:
+            info = cold.batch
+            if info is None:
+                info = False
+                if self._batch_info is not None and cold.draw_sigs:
+                    bi = self._batch_info(cold.draw_sigs)
+                    if bi is not None:
+                        info = bi
+                cold.batch = info
+            if info is not False:
+                det, sigma = info
+                ts = (det * np.exp(
+                    sigma * rng.standard_normal(len(det)))).tolist()
         cur = 0
 
         for st in cold.steps:
@@ -646,6 +823,22 @@ class Runtime:
             self._run_live(program_factory, sampler)
             return RunResult.from_report(critter.report())
 
+        prog = self._get_program(program_factory)
+        if force_execute:
+            cold = prog.cold
+            if cold is None:
+                cold = prog.cold = self._build_cold(prog)
+            self._run_events_cold(cold)
+        elif self.compiled and critter.warm_eligible():
+            warm = prog.warm
+            if warm is None:
+                warm = prog.warm = self._build_warm(prog)
+            critter.run_warm(warm, sampler, self.overhead)
+        else:
+            self._run_events(prog, sampler)
+        return RunResult.from_report(critter.report())
+
+    def _get_program(self, program_factory) -> _EventProgram:
         try:
             prog = self._traces.get(program_factory)
         except TypeError:            # unhashable/unweakrefable factory
@@ -656,14 +849,7 @@ class Runtime:
                 self._traces[program_factory] = prog
             except TypeError:
                 pass
-        if force_execute:
-            cold = prog.cold
-            if cold is None:
-                cold = prog.cold = self._build_cold(prog)
-            self._run_events_cold(cold)
-        else:
-            self._run_events(prog, sampler)
-        return RunResult.from_report(critter.report())
+        return prog
 
     def _run_live(self, program_factory, sampler) -> None:
         """The seed engine's interleaved pass (``trace_cache=False``):
