@@ -39,12 +39,20 @@ PR 9 adds the compiled-warm split and the counter-RNG cold metric:
 - ``compiled`` — warm-program segmentation metadata (segment counts,
   fused events, batch sizes), also emitted into check_results.json.
 
+PR 10 adds the cross-task program-cache metric:
+
+- ``events_per_sec_cold_cached`` — the batched cold run against a warmed
+  on-disk ``ProgramCache``: artifact deserialization replaces the
+  recording pass (the replay path every sweep task after the first with
+  a given geometry takes); ``cold_cached_speedup_vs_batched`` is its
+  ratio over the record-from-scratch cold run.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full sweep
     PYTHONPATH=src python -m benchmarks.bench_engine --quick    # ~10 s sanity
     PYTHONPATH=src python -m benchmarks.bench_engine --verify   # cold-path,
-                       # compiled-path and counter-RNG bit-identity
-                       # assertions, then exit
+                       # compiled-path, counter-RNG and program-cache
+                       # bit-identity assertions, then exit
     PYTHONPATH=src python -m benchmarks.bench_engine --out path.json
 """
 
@@ -77,7 +85,8 @@ GEOMETRIES = {
 
 def _setup(world_size: int, *, pol: str, tol: float, seed: int,
            straggler_p=None, trace_cache: bool = True,
-           compiled: bool = True, counter_rng: bool = False):
+           compiled: bool = True, counter_rng: bool = False,
+           program_cache=None):
     pr, pc, n, tile = GEOMETRIES[world_size]
     world = World(world_size)
     critter = Critter(world, policy(pol, tolerance=tol))
@@ -85,15 +94,22 @@ def _setup(world_size: int, *, pol: str, tol: float, seed: int,
     cm = CostModel(KNL_STAMPEDE2, allocation=0, seed=seed,
                    counter_rng=counter_rng, **kw)
     rt = Runtime(world, critter, cm.sample, seed=seed,
-                 trace_cache=trace_cache, compiled=compiled)
+                 trace_cache=trace_cache, compiled=compiled,
+                 program_cache=program_cache)
     prog = slate_cholesky.make_program(world, n=n, tile=tile, lookahead=1,
                                        pr=pr, pc=pc)
+    if program_cache is not None:
+        from repro.simmpi.program import structural_fingerprint
+        prog.program_key = structural_fingerprint(
+            "bench-slate-cholesky", f"w{world_size}",
+            {"n": n, "tile": tile, "lookahead": 1, "pr": pr, "pc": pc},
+            world_size)
     return rt, prog
 
 
 def bench_cold(world_size: int, *, pol: str = "online", tol: float = 0.25,
                seed: int = 0, straggler_p=0.0, trace_cache: bool = True,
-               counter_rng: bool = False) -> dict:
+               counter_rng: bool = False, program_cache=None) -> dict:
     """One recording (forced) run in isolation — the batched cold path
     when ``straggler_p == 0`` (vectorized pre-draw), the scalar-fallback
     cold path otherwise (unless ``counter_rng=True``, where the
@@ -101,16 +117,22 @@ def bench_cold(world_size: int, *, pol: str = "online", tol: float = 0.25,
     with stragglers on), and with ``trace_cache=False`` the seed-style
     interleaved scalar pass that serves as the same-session reference the
     batched speedup is measured against (the shared CI box swings 2-4x
-    between sessions, so only within-session ratios are stable)."""
+    between sessions, so only within-session ratios are stable).
+
+    With ``program_cache`` (PR 10) the run consults the cross-task
+    program cache keyed by the geometry's structural fingerprint: against
+    a warmed cache the recording pass is replaced by artifact replay, so
+    the wall measures deserialization + forced execution."""
     rt, prog = _setup(world_size, pol=pol, tol=tol, seed=seed,
                       straggler_p=straggler_p, trace_cache=trace_cache,
-                      counter_rng=counter_rng)
+                      counter_rng=counter_rng, program_cache=program_cache)
     t0 = time.perf_counter()
     res = rt.run(prog, force_execute=True)
     dt = time.perf_counter() - t0
     return {"events": res.events, "wall_s": round(dt, 4),
             "events_per_sec": round(res.events / dt, 1),
-            "straggler_p": straggler_p}
+            "straggler_p": straggler_p, "recordings": rt.recordings,
+            "cache_hits": rt.cache_hits}
 
 
 def _study_session(world_size: int, *, pol: str, tol: float, seed: int,
@@ -161,7 +183,18 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
     session over the same protocol provides the same-session scalar-warm
     reference the compiled speedup is taken against, and the straggler
     cold pair (counter-RNG batched vs legacy scalar-fallback) measures the
-    PR-5 residual fix."""
+    PR-5 residual fix.
+
+    PR 10: ``events_per_sec_cold_cached`` measures the batched cold run
+    against a warmed on-disk program cache — the recording pass is
+    replaced by artifact deserialization (the cross-task replay path a
+    sweep worker takes on every task after the first with a given
+    geometry)."""
+    import shutil
+    import tempfile
+
+    from repro.simmpi.program import ProgramCache
+
     pr, pc, n, tile = GEOMETRIES[world_size]
     comp = _study_session(world_size, pol=pol, tol=tol, seed=seed,
                           selective_iters=selective_iters, warmup=warmup,
@@ -180,26 +213,43 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
     # straggler-off batched pre-draw vs interleaved scalar (PR 4), and
     # straggler-ON counter-RNG batched vs legacy scalar fallback (PR 9 —
     # the PR-5 residual: mixed normal/uniform draws batched per segment).
-    b_walls, s_walls, cb_walls, cs_walls = [], [], [], []
+    b_walls, s_walls, cb_walls, cs_walls, cc_walls = [], [], [], [], []
     n_events = 0
-    for _ in range(cold_repeats):
-        b = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
-                       straggler_p=0.0)
-        s = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
-                       straggler_p=0.0, trace_cache=False)
-        cb = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
-                        straggler_p=0.002, counter_rng=True)
-        cs = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
-                        straggler_p=0.002, counter_rng=False)
-        b_walls.append(b["wall_s"])
-        s_walls.append(s["wall_s"])
-        cb_walls.append(cb["wall_s"])
-        cs_walls.append(cs["wall_s"])
-        n_events = b["events"]
+    cache_dir = tempfile.mkdtemp(prefix="bench-progcache-")
+    try:
+        cache = ProgramCache(cache_dir)
+        # warm the cache: one untimed recording run stores the artifact
+        bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                   straggler_p=0.0, program_cache=cache)
+        for _ in range(cold_repeats):
+            b = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                           straggler_p=0.0)
+            s = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                           straggler_p=0.0, trace_cache=False)
+            cb = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                            straggler_p=0.002, counter_rng=True)
+            cs = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                            straggler_p=0.002, counter_rng=False)
+            # drop the in-memory entry so the hit pays the real artifact
+            # deserialization a fresh sweep worker pays, not a dict lookup
+            cache._mem.clear()
+            cc = bench_cold(world_size, pol=pol, tol=tol, seed=seed,
+                            straggler_p=0.0, program_cache=cache)
+            assert cc["recordings"] == 0 and cc["cache_hits"] == 1, (
+                f"cached cold run did not replay from the cache: {cc}")
+            b_walls.append(b["wall_s"])
+            s_walls.append(s["wall_s"])
+            cb_walls.append(cb["wall_s"])
+            cs_walls.append(cs["wall_s"])
+            cc_walls.append(cc["wall_s"])
+            n_events = b["events"]
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
     batched = round(n_events / min(b_walls), 1)
     scalar = round(n_events / min(s_walls), 1)
     ctr_batched = round(n_events / min(cb_walls), 1)
     ctr_scalar = round(n_events / min(cs_walls), 1)
+    cached = round(n_events / min(cc_walls), 1)
     return {
         "study": "slate-cholesky", "policy": pol, "tolerance": tol,
         "world_size": world_size, "n": n, "tile": tile, "lookahead": 1,
@@ -216,6 +266,8 @@ def bench_study(world_size: int, *, pol: str = "online", tol: float = 0.25,
         "cold_speedup_vs_scalar": round(batched / scalar, 2),
         "events_per_sec_cold_counter": ctr_batched,
         "cold_counter_speedup_vs_scalar": round(ctr_batched / ctr_scalar, 2),
+        "events_per_sec_cold_cached": cached,
+        "cold_cached_speedup_vs_batched": round(cached / batched, 2),
         "compiled": segmeta,
         "runs": runs,
     }
@@ -425,13 +477,59 @@ def verify_counter_rng(world_size: int = 16) -> dict:
             "scalar_block_parity": len(sigs)}
 
 
+def verify_program_cache(world_size: int = 16) -> dict:
+    """Assert a program-cache hit is a pure optimization: the tuner
+    protocol (forced run + 2 selective iterations) run three ways — cache
+    miss (records + stores), cache hit against the warmed store (replays
+    the deserialized artifact, zero recordings) and no cache at all —
+    must agree on every iteration report, the full engine state after
+    every iteration and the sampler RNG stream, and the replayed event
+    program must be structurally identical to the recorded one.
+
+    The full 5-policies x 3-studies x straggler matrix lives in
+    ``tests/test_program_cache.py``; this entry point is the quick
+    in-process gate ``check.sh --stage engine`` runs before timing."""
+    from repro.simmpi.program import ProgramCache
+
+    cache = ProgramCache()
+    traces, events, recordings = [], [], []
+    for use_cache in ("miss", "hit", "off"):
+        rt, prog = _setup(world_size, pol="online", tol=0.25, seed=0,
+                          straggler_p=0.002,
+                          program_cache=cache if use_cache != "off"
+                          else None)
+        trace = []
+        for i in range(3):
+            res = rt.run(prog, force_execute=(i == 0))
+            trace.append(tuple(getattr(res, f) for f in _REPORT_FIELDS))
+            trace.append(_engine_snapshot(rt.critter))
+        trace.append(rt._rng.bit_generator.state)
+        traces.append(trace)
+        events.append(_canonical_events(rt._get_program(prog)))
+        recordings.append(rt.recordings)
+    assert recordings == [1, 0, 1], (
+        f"cache hit did not skip recording: {recordings}")
+    assert cache.hits == 1 and cache.misses == 1, (
+        f"unexpected cache traffic: {cache.stats()}")
+    for i, (a, b) in enumerate(zip(traces[0], traces[1])):
+        assert a == b, f"cache-hit replay diverged at trace step {i}"
+    for i, (a, b) in enumerate(zip(traces[0], traces[2])):
+        assert a == b, f"cache-miss run diverged from uncached at step {i}"
+    assert events[0] == events[1] == events[2], (
+        "replayed event program is not structurally identical")
+    return {"world_size": world_size, "events": len(events[0]),
+            "store": cache.stats()}
+
+
 _RATE_FIELDS = ("events_per_sec", "events_per_sec_warm",
                 "events_per_sec_warm_scalar",
                 "events_per_sec_cold", "events_per_sec_cold_batched",
                 "events_per_sec_cold_scalar",
-                "events_per_sec_cold_counter")
+                "events_per_sec_cold_counter",
+                "events_per_sec_cold_cached")
 _RATIO_FIELDS = ("warm_speedup_vs_scalar", "cold_speedup_vs_scalar",
-                 "cold_counter_speedup_vs_scalar")
+                 "cold_counter_speedup_vs_scalar",
+                 "cold_cached_speedup_vs_batched")
 
 
 def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6,
@@ -456,7 +554,9 @@ def run(world_sizes=(16, 64, 256), *, selective_iters: int = 6,
               f"cold_batched={r['events_per_sec_cold_batched']:9.1f}  "
               f"(vs scalar {r['cold_speedup_vs_scalar']:.2f}x)  "
               f"cold_counter={r['events_per_sec_cold_counter']:9.1f}  "
-              f"(vs scalar {r['cold_counter_speedup_vs_scalar']:.2f}x)")
+              f"(vs scalar {r['cold_counter_speedup_vs_scalar']:.2f}x)  "
+              f"cold_cached={r['events_per_sec_cold_cached']:9.1f}  "
+              f"(vs batched {r['cold_cached_speedup_vs_batched']:.2f}x)")
         seg = r["compiled"]
         print(f"            compiled: {seg['segments']} segments, "
               f"{seg['fused_events']} fused events, "
@@ -495,6 +595,9 @@ def main():
         print(f"counter-RNG verify OK: {summary['draws']} draws, "
               f"scalar/block parity over "
               f"{summary['scalar_block_parity']} signatures")
+        summary = verify_program_cache()
+        print(f"program-cache verify OK: {summary['events']} events "
+              f"replayed bit-identical, store {summary['store']}")
         return
     if args.quick:
         out = run(world_sizes=(16, 64), selective_iters=4,

@@ -28,7 +28,11 @@
 # box-noise-immune signal on top: the compiled warm program's SAME-SESSION
 # speedup over the scalar interpreter must stay >= max(1.0, CHECK_RATIO x
 # the committed warm_speedup_vs_scalar), and the engine stage verifies
-# compiled-path + counter-RNG bit-identity before timing anything.
+# compiled-path + counter-RNG bit-identity before timing anything.  PR 10
+# adds program-cache replay identity to those verifies, and the scheduler
+# stage asserts the remote worker's sweep-scoped program cache actually
+# replays across tasks (>= 1 hit, exactly one recording per geometry),
+# emitting the hit/miss ratio into check_results.json.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -88,7 +92,8 @@ import sys
 sys.path.insert(0, os.getcwd())
 from benchmarks.bench_engine import (bench_study, verify_cold_path,
                                      verify_compiled_path,
-                                     verify_counter_rng)
+                                     verify_counter_rng,
+                                     verify_program_cache)
 
 RATIO = float(os.environ.get("CHECK_RATIO", "0.5"))
 
@@ -101,6 +106,9 @@ print(f"compiled-path identity OK ({summary['configs']} policy x "
       f"{seg['fused_events']} fused events)")
 summary = verify_counter_rng(16)
 print(f"counter-RNG identity OK ({summary['draws']} draws)")
+summary = verify_program_cache(16)
+print(f"program-cache identity OK ({summary['events']} events replayed "
+      f"bit-identical; store {summary['store']})")
 
 with open("BENCH_engine.json") as f:
     base = {r["world_size"]: r for r in json.load(f)["results"]}
@@ -235,6 +243,9 @@ def sess():
 def strip(r):
     d = r.to_json()
     d.pop("wall_s")
+    # remote workers keep a sweep-scoped program cache; replay is
+    # bit-identical, only the provenance counters differ from serial
+    d.get("extra", {}).pop("program_cache", None)
     return d
 
 
@@ -266,19 +277,46 @@ try:
               f"{worker.stderr.read()}")
         sys.exit(1)
     addr = f"{m.group(1)}:{m.group(2)}"
-    remote = [strip(r) for r in sess().sweep(
+    raw = sess().sweep(
         executor=RemoteExecutor(
             [addr], expect={"space": space.name,
-                            "n_points": len(space)}), **kw)]
+                            "n_points": len(space)}), **kw)
+    remote = [strip(r) for r in raw]
 finally:
     worker.terminate()
     worker.wait(timeout=10)
 if remote != serial:
     print("FAIL: localhost remote-worker sweep diverged from serial")
     sys.exit(1)
+# the worker's sweep-scoped program cache must have replayed at least one
+# recorded program across tasks: the first task records every geometry,
+# every later task on the same worker is a pure cache hit
+pc = [r.extra.get("program_cache") for r in raw]
+if any(c is None for c in pc):
+    print("FAIL: remote results carry no program_cache provenance")
+    sys.exit(1)
+hits = sum(c["hits"] for c in pc)
+misses = sum(c["misses"] for c in pc)
+recordings = sum(c["recordings"] for c in pc)
+if hits < 1:
+    print(f"FAIL: remote worker recorded every task from scratch "
+          f"(hits={hits}, misses={misses}, recordings={recordings}) — "
+          f"the cross-task program cache never replayed")
+    sys.exit(1)
+if recordings != len(space):
+    print(f"FAIL: {recordings} recordings for {len(space)} unique "
+          f"geometries across {len(raw)} tasks — expected exactly one "
+          f"recording per geometry")
+    sys.exit(1)
 print(f"remote worker OK: {len(remote)} sweep points over {addr} "
-      f"== serial")
-print(f'RATIO_JSON "scheduler_points": {len(remote)}, "remote_workers": 1')
+      f"== serial; program cache {hits} hit(s) / {misses} miss(es), "
+      f"{recordings} recording(s) for {len(space)} geometries")
+print(f'RATIO_JSON "scheduler_points": {len(remote)}, '
+      f'"remote_workers": 1, '
+      f'"program_cache_hits": {hits}, '
+      f'"program_cache_misses": {misses}, '
+      f'"program_cache_hit_ratio": {hits / (hits + misses):.3f}, '
+      f'"program_recordings": {recordings}')
 EOF
 }
 
@@ -309,6 +347,7 @@ def strip(r):
     d = r.to_json()
     d.pop("wall_s", None)
     d.get("extra", {}).pop("recovery", None)
+    d.get("extra", {}).pop("program_cache", None)
     return d
 
 

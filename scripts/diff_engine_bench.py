@@ -43,6 +43,7 @@ RATE_FIELDS = (
     "events_per_sec_cold",
     "events_per_sec_cold_batched",
     "events_per_sec_cold_counter",
+    "events_per_sec_cold_cached",
 )
 # within-session speedup ratios: box-noise-immune, same one-sided gate,
 # but only at world sizes >= RATIO_MIN_WORLD (smaller geometries finish
@@ -51,6 +52,7 @@ RATIO_FIELDS = (
     "warm_speedup_vs_scalar",
     "cold_speedup_vs_scalar",
     "cold_counter_speedup_vs_scalar",
+    "cold_cached_speedup_vs_batched",
 )
 RATIO_MIN_WORLD = 64
 
@@ -83,7 +85,7 @@ def diff(prev: dict, curr: dict, *, tol: float, tol_ratio: float):
             pv, cv = p.get(field), c.get(field)
             if not isinstance(pv, (int, float)) or pv <= 0:
                 notes.append(f"world {ws}: no {field} baseline "
-                             f"(pre-PR-9 artifact?)")
+                             f"(older artifact format?)")
                 continue
             if not isinstance(cv, (int, float)):
                 failures.append(f"world {ws}: {field} missing from "

@@ -114,6 +114,14 @@ class BackendRun:
         falls back to uniform candidate sampling."""
         return None
 
+    def cache_info(self) -> Optional[dict]:
+        """Event-program cache observability for ``StudyResult.extra``:
+        per-point structural fingerprints plus hit/miss/recording counters
+        (see ``repro.simmpi.program``).  ``None`` when the backend has no
+        program cache — the common case for non-sim backends and for sim
+        runs opened without one."""
+        return None
+
     def cost_lower_bound(self, point: ConfigPoint) -> Optional[float]:
         """Analytic lower bound on the configuration's step time (roofline:
         no schedule can beat its compute at peak flops / memory
@@ -162,21 +170,46 @@ class SimBackend(Backend):
     name = "sim"
 
     def __init__(self, *, machine=None, timer: Optional[Callable] = None,
-                 cost_model=None, overhead: float = 1e-6):
+                 cost_model=None, overhead: float = 1e-6,
+                 program_cache=None):
         self.machine = machine
         self.timer = timer
         self.cost_model = cost_model
         self.overhead = overhead
+        # cross-run event-program cache (repro.simmpi.program.ProgramCache):
+        # pass an instance to share one across backends, a directory path
+        # for the crash-atomic on-disk store, or "mem" for a process-local
+        # LRU.  All runs this backend opens share it — the recording pass
+        # then executes once per unique geometry across the whole sweep.
+        if isinstance(program_cache, str):
+            from repro.simmpi.program import ProgramCache
+            program_cache = ProgramCache(
+                None if program_cache == "mem" else program_cache)
+        self.program_cache = program_cache
 
     def fingerprint(self) -> dict:
         # custom timing callables cannot be fingerprinted beyond their
         # presence; "custom" still prevents the worst confusion (replaying
-        # a deterministic-timer journal as a default-cost-model study)
+        # a deterministic-timer journal as a default-cost-model study).
+        # The program cache is deliberately absent: cache-hit replay is
+        # bit-identical to re-recording, so it must not split checkpoint
+        # identity.
         return {"name": self.name, "overhead": self.overhead,
                 "machine": getattr(self.machine, "name", None),
                 "timer": "custom" if self.timer is not None else "default",
                 "cost_model": "custom" if self.cost_model is not None
                 else "default"}
+
+    def point_fingerprints(self, space: SearchSpace) -> Optional[Dict]:
+        """Structural fingerprints of every point in ``space`` — what task
+        payloads advertise so remote dispatch knows which programs a worker
+        already holds.  ``None`` when no program cache is configured."""
+        if self.program_cache is None:
+            return None
+        from repro.simmpi.program import structural_fingerprint
+        return {p.name: structural_fingerprint(space.name, p.name, p.params,
+                                               space.world_size)
+                for p in space.points}
 
     def open(self, space: SearchSpace, policy: Policy, *,
              seed: int = 0, allocation: int = 0,
@@ -184,13 +217,14 @@ class SimBackend(Backend):
         return SimRun(space, policy, machine=self.machine,
                       timer=self.timer, cost_model=self.cost_model,
                       overhead=self.overhead, seed=seed,
-                      allocation=allocation, prior=prior)
+                      allocation=allocation, prior=prior,
+                      program_cache=self.program_cache)
 
 
 class SimRun(BackendRun):
     def __init__(self, space: SearchSpace, policy: Policy, *, machine,
                  timer, cost_model, overhead, seed: int, allocation: int,
-                 prior=None):
+                 prior=None, program_cache=None):
         # local imports keep repro.api importable without the sim stack
         from repro.core.critter import Critter
         from repro.simmpi.comm import World
@@ -225,12 +259,23 @@ class SimRun(BackendRun):
         self._spec = cm.spec if cm is not None else None
         self.runtime = Runtime(self.world, self.critter, timer,
                                seed=seed + 17 * allocation,
-                               overhead=overhead)
+                               overhead=overhead,
+                               program_cache=program_cache)
+        self._space_name = space.name
         # one program factory per configuration payload, created on first
         # use — its identity keys the runtime's event-trace cache.  Keyed
         # by the payload callable (not the point name) so an ad-hoc point
         # that reuses a study point's name still measures its own program.
+        # With a program cache configured, factories are ALSO stamped with
+        # their structural fingerprint (``program_key``), switching the
+        # runtime to the fingerprint-keyed path: equal geometries share one
+        # recording, in-process and across runs — the opt-in trades the
+        # payload-identity property for the (name, params)-determine-
+        # structure contract of repro.simmpi.program.
         self._progs: Dict[Any, Any] = {}
+        self._cached = program_cache is not None
+        # point name -> structural fingerprint, for StudyResult.extra
+        self._fps: Dict[str, str] = {}
         # structural profiles per payload (see _structure)
         self._structures: Dict[Any, tuple] = {}
 
@@ -238,6 +283,11 @@ class SimRun(BackendRun):
         prog = self._progs.get(point.payload)
         if prog is None:
             prog = self._progs[point.payload] = point.payload(self.world)
+            if self._cached:
+                from repro.simmpi.program import structural_fingerprint
+                fp = structural_fingerprint(self._space_name, point.name,
+                                            point.params, self.world.size)
+                self._fps[point.name] = prog.program_key = fp
         return prog
 
     @staticmethod
@@ -296,8 +346,8 @@ class SimRun(BackendRun):
             return got
         from repro.core.signatures import (bytes_of, flops_of,
                                            structural_key)
-        from repro.simmpi.runtime import (EV_COLL, EV_COMP, EV_IMATCH,
-                                          EV_P2P)
+        from repro.simmpi.runtime import (EV_BLOCK, EV_COLL, EV_COMP,
+                                          EV_IMATCH, EV_P2P)
         w = self.world.size
         sigs = self.world.interner.sigs
         keys: Dict[int, str] = {}
@@ -317,14 +367,25 @@ class SimRun(BackendRun):
                 arr = counts[key] = np.zeros(w)
             arr[ranks] += 1.0
 
-        for ev in self.runtime._record(self._prog(point)):
+        def comp(r, sid):
+            bump(key_of(sid), r)
+            sig = sigs[sid]
+            flops[r] += flops_of(sig)
+            nbytes[r] += bytes_of(sig)
+
+        # the COMPILED program, not a raw re-recording: profiling shares
+        # the runtime's program map (and the cross-run cache when one is
+        # configured), so the model-guided driver scoring the full grid
+        # records each unique geometry at most once — and a surviving
+        # candidate's later measurement reuses the scorer's program
+        for ev in self.runtime._get_program(self._prog(point)).events:
             kind = ev[0]
             if kind == EV_COMP:
-                _, r, sid = ev
-                bump(key_of(sid), r)
-                sig = sigs[sid]
-                flops[r] += flops_of(sig)
-                nbytes[r] += bytes_of(sig)
+                comp(ev[1], ev[2])
+            elif kind == EV_BLOCK:
+                r = ev[1]
+                for sid in ev[2].sids:
+                    comp(r, sid)
             elif kind == EV_COLL:
                 _, sid, comm = ev
                 bump(key_of(sid), comm.ranks_np)
@@ -353,6 +414,17 @@ class SimRun(BackendRun):
         # computation-only: communication at any bandwidth only adds time,
         # so the slowest rank's roofline is a valid lower bound
         return float(per_rank.max()) if per_rank.size else 0.0
+
+    def cache_info(self) -> Optional[dict]:
+        if not self._cached:
+            return None
+        rt = self.runtime
+        info = {"fingerprints": dict(self._fps),
+                "hits": rt.cache_hits, "misses": rt.cache_misses,
+                "recordings": rt.recordings}
+        if rt.program_cache is not None:
+            info["store"] = rt.program_cache.stats()
+        return info
 
 
 # --------------------------------------------------------------- wall clock

@@ -313,7 +313,15 @@ class RemoteExecutor(Executor):
 
     Workers own their (space, backend) — closures never cross the wire,
     only task payloads and JSON results, which is what lets a sweep span
-    machines.
+    machines.  Recorded event programs never cross it either: payloads
+    carry per-point *structural fingerprints* (``program_fingerprints``,
+    attached by ``AutotuneSession._task_payload`` when the dispatching
+    backend has a ``ProgramCache``), and each worker keeps its own
+    sweep-scoped cache (``--program-cache``, default in-memory), so a
+    worker records each unique geometry once across every task it serves
+    and re-dispatch never re-ships — or re-records — a program the worker
+    already holds.  Fingerprint mismatch between dispatcher and worker is
+    a loud task error (geometry drift), surfaced like any task failure.
 
     Fault tolerance:
 

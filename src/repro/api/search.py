@@ -232,7 +232,13 @@ def _surrogate_scores(run: "BackendRun", points: List[ConfigPoint], model,
     drawn time on each participating rank (the backend's structural
     profile) and take the slowest rank; the score is the mean over draws.
     ``None`` when the backend cannot profile or the model covers no
-    profiled kernel — the driver then samples candidates uniformly."""
+    profiled kernel — the driver then samples candidates uniformly.
+
+    Profiling the full grid goes through the backend's compiled-program
+    map (and its ``ProgramCache`` when one is configured — see
+    ``repro.simmpi.program``), so scoring records each unique geometry at
+    most once, survivors' measurements reuse the scorer's programs, and a
+    warm cache makes grid scoring recording-free entirely."""
     if not model:
         return None
     profiles = []

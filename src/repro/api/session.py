@@ -246,6 +246,13 @@ class AutotuneSession:
             if bank is not None:
                 extra = dict(extra)
                 extra["kernel_stats"] = bank
+        cache_info = run.cache_info()
+        if cache_info is not None:
+            # program-cache provenance: per-point structural fingerprints
+            # plus this task's hit/miss/recording counters, so the nightly
+            # drift gate can attribute changes to code vs cached artifact
+            extra = dict(extra)
+            extra["program_cache"] = cache_info
         result = StudyResult(
             study=self.space.name, policy=pol.name,
             tolerance=pol.tolerance, records=records,
@@ -278,12 +285,23 @@ class AutotuneSession:
         """The JSON-able task message executors ship (see ``run_payload``:
         self-describing, so a remote worker reconstructs the exact study
         from it and its own (space, backend))."""
-        return {"policy": asdict(self._policy(spec[0], spec[1])),
-                "seed": spec[2], "allocation": spec[3],
-                "search": self.search, "trials": self.trials,
-                "search_options": self.search_options,
-                "prior": prior.to_json() if prior is not None else None,
-                "collect": collect, "shared": shared}
+        payload = {"policy": asdict(self._policy(spec[0], spec[1])),
+                   "seed": spec[2], "allocation": spec[3],
+                   "search": self.search, "trials": self.trials,
+                   "search_options": self.search_options,
+                   "prior": prior.to_json() if prior is not None else None,
+                   "collect": collect, "shared": shared}
+        fps = getattr(self.backend, "point_fingerprints", None)
+        if fps is not None:
+            # structural fingerprints of the points this task will measure:
+            # a worker holding a program under the same fingerprint replays
+            # it instead of re-recording, and a worker computing a
+            # DIFFERENT fingerprint for the same point name refuses the
+            # task loudly (geometry drift between dispatcher and worker)
+            fps = fps(self.space)
+            if fps:
+                payload["program_fingerprints"] = fps
+        return payload
 
     def _select_executor(self, workers: int, n_tasks: int) -> Executor:
         if workers > 1 and n_tasks > 1 and fork_available() \
@@ -424,6 +442,16 @@ class AutotuneSession:
         def on_done(task: Task) -> None:
             i, _ = task.spec
             res = task.result
+            pc = res.get("extra", {}).get("program_cache")
+            if pc:
+                # journal the task's program-cache counters: summing
+                # ``recordings`` across a sweep's events shows how many
+                # structural passes actually ran (the record-once-per-
+                # geometry acceptance counter: N tasks -> N_unique)
+                on_event({"event": "program_cache", "task": i,
+                          "hits": pc.get("hits", 0),
+                          "misses": pc.get("misses", 0),
+                          "recordings": pc.get("recordings", 0)})
             bank_json = res.get("extra", {}).get("kernel_stats")
             if shared is not None:
                 shared.add(bank_json)
@@ -470,6 +498,25 @@ def run_payload(space: SearchSpace, backend: Backend, payload: dict, *,
     payload — it is self-describing: full policy fields, search, trials,
     prior bank, transfer flags)."""
     pol = Policy(**payload["policy"])
+    sent = payload.get("program_fingerprints")
+    if sent:
+        # geometry-drift guard: the dispatcher's structural fingerprints
+        # must match what this (space, backend) computes for the same
+        # point names — a mismatch means the two sides hold different
+        # geometries under one name, and a cached program replayed across
+        # that divide would be silently wrong
+        mine = getattr(backend, "point_fingerprints", lambda s: None)(space)
+        if mine:
+            drift = {name: (fp, mine[name]) for name, fp in sent.items()
+                     if name in mine and mine[name] != fp}
+            if drift:
+                detail = ", ".join(
+                    f"{name}: dispatcher {theirs} vs worker {ours}"
+                    for name, (theirs, ours) in sorted(drift.items())[:4])
+                raise ValueError(
+                    f"program fingerprint mismatch on {len(drift)} "
+                    f"point(s) of space {space.name!r} ({detail}); "
+                    f"refusing to measure a drifted geometry")
     if session is None:
         session = AutotuneSession(
             space, backend, policy=pol,

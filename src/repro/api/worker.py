@@ -83,6 +83,25 @@ def resolve_spec(spec: str, spec_args: dict) -> Tuple[SearchSpace, object]:
     return space, backend
 
 
+def arm_program_cache(backend, mode: str) -> None:
+    """Give a sim backend a worker-scoped event-program cache
+    (``repro.simmpi.program.ProgramCache``), so the structural recording
+    pass runs once per unique geometry across ALL tasks this worker
+    serves, not once per task.  ``mode`` is ``"mem"`` (in-process LRU) or
+    a directory path (crash-atomic on-disk store, sharable between
+    workers and across restarts).  No-op for backends without a
+    ``program_cache`` attribute (non-sim) or with one already configured
+    by the ``--spec`` factory.
+
+    Replay is bit-identical to re-recording (the engine's identity gate),
+    which is why the cache never appears in ``identity()`` or the backend
+    fingerprint: a cached worker and an uncached one are interchangeable."""
+    if getattr(backend, "program_cache", "absent") is None:
+        from repro.simmpi.program import ProgramCache
+        backend.program_cache = ProgramCache(
+            None if mode == "mem" else mode)
+
+
 def identity(space: SearchSpace, backend) -> dict:
     return {"space": space.name, "n_points": len(space),
             "backend": backend.fingerprint()}
@@ -229,12 +248,20 @@ def main(argv=None) -> None:
                          "seconds")
     ap.add_argument("--faults", default=None, metavar="JSON",
                     help="chaos-testing FaultPlan (repro.api.faults)")
+    ap.add_argument("--program-cache", default="mem", metavar="MODE",
+                    help='event-program cache for sim backends: "mem" '
+                         "(default: in-process LRU shared across every "
+                         'task this worker serves), "off", or a directory '
+                         "path for the crash-atomic on-disk store "
+                         "(sharable between workers and across restarts)")
     args = ap.parse_args(argv)
     faults = None
     if args.faults:
         from .faults import FaultPlan
         faults = FaultPlan.from_json(json.loads(args.faults))
     space, backend = resolve_spec(args.spec, json.loads(args.spec_args))
+    if args.program_cache != "off":
+        arm_program_cache(backend, args.program_cache)
     if args.connect:
         serve_connect(space, backend, args.connect,
                       connect_timeout=args.connect_timeout, faults=faults)

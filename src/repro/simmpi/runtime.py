@@ -70,15 +70,23 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.critter import (Critter, IterationReport, W_BHEAD, W_BLOCK,
-                                W_CHEAD, W_COLL, W_COMP, W_IMATCH, W_IPOST,
-                                W_P2P)
+from repro.core.critter import Critter, IterationReport
 from repro.core.signatures import Signature, comm_sig, comp_sig, p2p_sig
 from .comm import World
 from .ops import (CS_BLOCK, CS_COLL, CS_COMP, CS_IMATCH, CS_IPOST, CS_P2P,
                   EV_BLOCK, EV_COLL, EV_COMP, EV_IMATCH, EV_IPOST, EV_P2P,
                   KIND_COLL, KIND_COMP, KIND_ISEND, KIND_RECV, KIND_SEND,
                   KIND_WAIT)
+from .program import (CompBlock, ColdProgram, EventProgram, ProgramCache,
+                      WarmProgram, build_cold, build_warm, compile_events)
+
+# compiled-program containers and lowering passes live in .program (PR 10:
+# programs are serializable, cacheable artifacts); the historical private
+# names stay importable for the bench/test harnesses
+_CompBlock = CompBlock
+_EventProgram = EventProgram
+_WarmProgram = WarmProgram
+_ColdProgram = ColdProgram
 
 RUNNABLE, BLOCKED, DONE = 0, 1, 2
 
@@ -94,128 +102,6 @@ class RunResult(IterationReport):
         return cls(rep.predicted_time, rep.wall_time, rep.crit_comp,
                    rep.crit_comm, rep.measured_time, rep.max_measured_comp,
                    rep.executed, rep.skipped, rep.events)
-
-
-class _CompBlock:
-    """A run of consecutive computation events of one rank, fused at event
-    compilation: interned signature ids plus the unique-id/count arrays the
-    profiler's vectorized skip path charges in one step."""
-
-    __slots__ = ("sids", "sids_np", "uniq", "counts", "n", "max_sid",
-                 "groups")
-
-    def __init__(self, sids: List[int]):
-        self.sids = sids
-        self.sids_np = np.array(sids, dtype=np.intp)
-        self.uniq, self.counts = np.unique(self.sids_np, return_counts=True)
-        self.n = len(sids)
-        self.max_sid = int(self.sids_np.max())
-        # lazy per-unique-sid position lists (cold batched charging)
-        self.groups: Optional[List[List[int]]] = None
-
-    def group_indices(self) -> List[List[int]]:
-        """Positions of each unique sid's samples within the block, in
-        block order (so per-sid Welford updates see samples in the same
-        order as per-event updates)."""
-        g = self.groups
-        if g is None:
-            if len(self.uniq) == 1:
-                g = [list(range(self.n))]
-            else:
-                g = [np.nonzero(self.sids_np == u)[0].tolist()
-                     for u in self.uniq.tolist()]
-            self.groups = g
-        return g
-
-
-# minimum run length worth a vectorized block (below this the fancy-index
-# overhead exceeds the per-op savings)
-_MIN_BLOCK = 4
-
-
-class _EventProgram:
-    """The flat interception sequence of one configuration run.
-
-    events -- list of opcode tuples (see the EV_*/CS_* constants in .ops)
-    n_slots -- number of isend post->match payload slots
-    cold -- lazily-built batched cold-run program (_ColdProgram)
-    warm -- lazily-built compiled warm program (_WarmProgram)
-    """
-
-    __slots__ = ("events", "n_slots", "cold", "warm")
-
-    def __init__(self, events, n_slots):
-        self.events = events
-        self.n_slots = n_slots
-        self.cold: Optional[_ColdProgram] = None
-        self.warm: Optional[_WarmProgram] = None
-
-
-class _WarmProgram:
-    """The event program segmented for the compiled selective interpreter
-    (``Critter.run_warm``).
-
-    entries -- list of W_* opcode tuples (see core.critter): one entry per
-             interception, with each maximal per-rank run of computation
-             events between that rank's skip-decision / communication
-             boundaries marked by a W_CHEAD / W_BHEAD head entry carrying
-             the segment metadata ``(sids, uniq, counts, n_events,
-             n_member_entries)``
-    n_slots -- isend post->match payload slots (same as the event program)
-    max_sid -- highest signature id any entry touches (pre-grow capacity)
-    meta -- segmentation statistics for the bench harness / CI gate:
-             segment count, fused event count, batch-size distribution
-    """
-
-    __slots__ = ("entries", "n_slots", "max_sid", "meta")
-
-    def __init__(self, entries, n_slots, max_sid, meta):
-        self.entries = entries
-        self.n_slots = n_slots
-        self.max_sid = max_sid
-        self.meta = meta
-
-
-class _ColdProgram:
-    """The event program re-sliced for batched forced (cold) execution.
-
-    A forced run samples EVERY kernel — computation and communication — in
-    step order, so the whole run's draw sequence is known statically:
-    ``draw_sigs`` lists the sampled signatures in consumption order (one
-    per CS_COMP / CS_COLL / CS_P2P / CS_IMATCH step, ``block.n`` per
-    CS_BLOCK step), and the interpreter walks ``steps`` with a running
-    cursor into the draw buffer.  When the cost model can batch
-    (``batch_info``: lognormal noise, straggler branch off), all draws
-    come from ONE vectorized ``standard_normal`` call — bit-equal to the
-    scalar stream because ``Generator.normal(0, s)`` is exactly
-    ``standard_normal() * s`` and vectorized fills consume the bit stream
-    identically to repeated scalar draws; otherwise each step draws through
-    the scalar timer at its cursor position, the same calls in the same
-    order as the interleaved seed engine.
-
-    steps -- (CS_COMP, rank, sid, sig) | (CS_BLOCK, rank, block, sigs)
-             | (CS_IPOST, rank, slot) | (CS_COLL, sid, comm, sig)
-             | (CS_P2P, src, dst, sid, sig)
-             | (CS_IMATCH, src, dst, sid, slot, sig)
-    exec_rows/exec_cols -- the statically-known (rank, sid) pairs executed
-             by every sampling step (collectives included), for
-             Critter.finish_cold's deferred iter_exec/mean_arr bulk pass
-    batch -- lazy cost-model batch support: None until probed, False when
-             the timer cannot batch, else (det, sigma) draw-order arrays
-    """
-
-    __slots__ = ("steps", "draw_sigs", "n_slots", "max_sid", "exec_rows",
-                 "exec_cols", "batch")
-
-    def __init__(self, steps, draw_sigs, n_slots, max_sid, exec_pairs):
-        self.steps = steps
-        self.draw_sigs = draw_sigs
-        self.n_slots = n_slots
-        self.max_sid = max_sid
-        pairs = sorted(exec_pairs)
-        self.exec_rows = np.array([p[0] for p in pairs], dtype=np.intp)
-        self.exec_cols = np.array([p[1] for p in pairs], dtype=np.intp)
-        self.batch = None
 
 
 class _CollSite:
@@ -235,12 +121,18 @@ class Runtime:
     def __init__(self, world: World, critter: Critter,
                  timer: Callable[[Signature, np.random.Generator], float],
                  *, seed: int = 0, overhead: float = 1e-6,
-                 trace_cache: bool = True, compiled: bool = True):
+                 trace_cache: bool = True, compiled: bool = True,
+                 program_cache: Optional[ProgramCache] = None):
         self.world = world
         self.critter = critter
         self.timer = timer
         self.overhead = overhead
         self.trace_cache = trace_cache
+        # cross-Runtime event-program cache (see .program): consulted for
+        # factories that carry a ``program_key`` structural fingerprint;
+        # a hit materializes the recorded program into this World and
+        # skips ``_record`` entirely
+        self.program_cache = program_cache
         # compiled selective replay (Critter.run_warm over the segmented
         # warm program).  Bit-identical to the plain event interpreter;
         # ``compiled=False`` forces the scalar warm path (the bench harness
@@ -260,9 +152,20 @@ class Runtime:
         # counter discipline gives every event fixed draw slots, so there
         # is no scalar fallback left to pay
         self._sample_block = getattr(timer_obj, "sample_block", None)
-        # program_factory -> per-rank recorded op traces (weak: traces die
-        # with the configuration's program factory)
+        # program_factory -> compiled event program (weak: dies with the
+        # configuration's program factory) — the fallback identity-keyed
+        # map for factories without a structural fingerprint
         self._traces = weakref.WeakKeyDictionary()
+        # structural fingerprint -> compiled event program (strong: equal
+        # geometries share one program even when their factory objects are
+        # distinct or short-lived)
+        self._keyed: Dict[str, EventProgram] = {}
+        # observability: recordings counts actual structural passes;
+        # cache_hits/misses count program_cache consultations (fingerprint
+        # -keyed factories only)
+        self.recordings = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
 
     # -- signature interning (hot path) --------------------------------------
 
@@ -454,219 +357,22 @@ class Runtime:
                 raise DeadlockError(
                     f"{len(blocked)} ranks blocked with no progress: "
                     f"{detail}")
+        self.recordings += 1
         return events
 
     # -- event-program compilation --------------------------------------------
 
-    @staticmethod
-    def _compile_events(events) -> _EventProgram:
-        """Fuse runs of consecutive comp events of one rank into blocks.
+    # the lowering passes live in .program (they are pure functions of the
+    # event list + the World's interner table); these wrappers keep the
+    # historical call sites — and the bench/test harnesses poking them —
+    # working unchanged
+    _compile_events = staticmethod(compile_events)
 
-        Only *globally* consecutive runs are fused — the interleaved order
-        of interceptions across ranks (and therefore sampler RNG
-        consumption) is preserved exactly."""
-        out = []
-        run_rank = -1
-        run: List[int] = []
-        n_slots = 0
+    def _build_cold(self, prog: EventProgram) -> ColdProgram:
+        return build_cold(prog, self.world.interner.sigs)
 
-        def flush():
-            nonlocal run
-            if len(run) >= _MIN_BLOCK:
-                out.append((EV_BLOCK, run_rank, _CompBlock(run)))
-            else:
-                out.extend((EV_COMP, run_rank, sid) for sid in run)
-            run = []
-
-        for ev in events:
-            if ev[0] == EV_COMP:
-                if ev[1] != run_rank:
-                    if run:
-                        flush()
-                    run_rank = ev[1]
-                run.append(ev[2])
-                continue
-            if run:
-                flush()
-                run_rank = -1
-            if ev[0] == EV_IPOST:
-                n_slots = ev[3] + 1
-            out.append(ev)
-        if run:
-            flush()
-        return _EventProgram(out, n_slots)
-
-    def _build_cold(self, prog: _EventProgram) -> _ColdProgram:
-        """Flatten the event program into cold steps plus the forced run's
-        static draw sequence (see _ColdProgram)."""
-        sigs = self.world.interner.sigs
-        steps: list = []
-        draw_sigs: list = []
-        exec_pairs: set = set()
-        max_sid = 0
-        for ev in prog.events:
-            k = ev[0]
-            if k == EV_COMP:
-                sid = ev[2]
-                steps.append((CS_COMP, ev[1], sid, sigs[sid]))
-                draw_sigs.append(sigs[sid])
-                exec_pairs.add((ev[1], sid))
-            elif k == EV_BLOCK:
-                block = ev[2]
-                bsigs = [sigs[s] for s in block.sids]
-                steps.append((CS_BLOCK, ev[1], block, bsigs))
-                draw_sigs.extend(bsigs)
-                exec_pairs.update((ev[1], s) for s in block.uniq.tolist())
-                sid = block.max_sid
-            elif k == EV_IPOST:
-                sid = ev[2]
-                steps.append((CS_IPOST, ev[1], ev[3]))
-            elif k == EV_COLL:
-                sid = ev[1]
-                steps.append((CS_COLL, sid, ev[2], sigs[sid]))
-                draw_sigs.append(sigs[sid])
-                exec_pairs.update((r, sid) for r in ev[2].ranks)
-            elif k == EV_P2P:
-                sid = ev[3]
-                steps.append((CS_P2P, ev[1], ev[2], sid, sigs[sid]))
-                draw_sigs.append(sigs[sid])
-                exec_pairs.add((ev[1], sid))
-                exec_pairs.add((ev[2], sid))
-            else:
-                sid = ev[3]
-                steps.append((CS_IMATCH, ev[1], ev[2], sid, ev[4],
-                              sigs[sid]))
-                draw_sigs.append(sigs[sid])
-                exec_pairs.add((ev[1], sid))
-                exec_pairs.add((ev[2], sid))
-            if sid > max_sid:
-                max_sid = sid
-        return _ColdProgram(steps, draw_sigs, prog.n_slots, max_sid,
-                            exec_pairs)
-
-    def _build_warm(self, prog: _EventProgram) -> _WarmProgram:
-        """Segment the event program for the compiled selective interpreter.
-
-        Every maximal run of one rank's computation events (plain comps AND
-        fused blocks) between two of that rank's *boundaries* — any event
-        that touches the rank: a collective it participates in, a p2p it
-        sends or receives, an isend post or match — becomes one segment.
-        Within a segment no event of any other rank can observe the rank's
-        comp-charged state (only boundary events read it), so when every
-        kernel in the segment holds a memoized skip verdict the interpreter
-        charges the whole segment at the head entry and consumes the member
-        entries with a pending counter — the steady-state path that turns
-        per-event interpretation into one accumulation loop per segment.
-        A guard miss replays the members individually at their original
-        positions, so decisions and RNG consumption never reorder."""
-        sigs = self.world.interner.sigs
-        entries: list = []
-        # rank -> [entry indices, sids] of its currently-open comp run
-        open_runs: Dict[int, list] = {}
-        max_sid = 0
-        run_sizes: List[int] = []
-        n_comp = n_block = n_coll = n_p2p = n_ipost = n_imatch = 0
-
-        def close(r):
-            run = open_runs.pop(r, None)
-            if run is None:
-                return
-            idxs, rsids = run
-            if len(idxs) < 2:
-                return           # single-entry segment: no head needed
-            uniq: Dict[int, int] = {}
-            for s in rsids:
-                uniq[s] = uniq.get(s, 0) + 1
-            meta = (rsids, list(uniq), list(uniq.values()), len(rsids),
-                    len(idxs) - 1)
-            head = entries[idxs[0]]
-            if head[0] == W_COMP:
-                entries[idxs[0]] = (W_CHEAD, head[1], head[2], meta)
-            else:
-                entries[idxs[0]] = (W_BHEAD, head[1], head[2], head[3],
-                                    head[4], head[5], meta)
-            run_sizes.append(len(rsids))
-
-        for ev in prog.events:
-            k = ev[0]
-            if k == EV_COMP:
-                r = ev[1]
-                sid = ev[2]
-                if sid > max_sid:
-                    max_sid = sid
-                run = open_runs.get(r)
-                if run is None:
-                    run = open_runs[r] = [[], []]
-                run[0].append(len(entries))
-                run[1].append(sid)
-                entries.append((W_COMP, r, sid))
-                n_comp += 1
-            elif k == EV_BLOCK:
-                r = ev[1]
-                block = ev[2]
-                if block.max_sid > max_sid:
-                    max_sid = block.max_sid
-                run = open_runs.get(r)
-                if run is None:
-                    run = open_runs[r] = [[], []]
-                run[0].append(len(entries))
-                run[1].extend(block.sids)
-                entries.append((W_BLOCK, r, block.sids, block.uniq.tolist(),
-                                block.counts.tolist(), block.n))
-                n_block += 1
-            elif k == EV_IPOST:
-                r = ev[1]
-                sid = ev[2]
-                if sid > max_sid:
-                    max_sid = sid
-                close(r)
-                entries.append((W_IPOST, r, sid, ev[3]))
-                n_ipost += 1
-            elif k == EV_COLL:
-                sid = ev[1]
-                comm = ev[2]
-                if sid > max_sid:
-                    max_sid = sid
-                for r in comm.ranks:
-                    close(r)
-                entries.append((W_COLL, sid, comm, comm.ranks, sigs[sid]))
-                n_coll += 1
-            elif k == EV_P2P:
-                sid = ev[3]
-                if sid > max_sid:
-                    max_sid = sid
-                close(ev[1])
-                close(ev[2])
-                entries.append((W_P2P, ev[1], ev[2], sid, sigs[sid]))
-                n_p2p += 1
-            else:                               # EV_IMATCH
-                sid = ev[3]
-                if sid > max_sid:
-                    max_sid = sid
-                close(ev[1])
-                close(ev[2])
-                entries.append((W_IMATCH, ev[1], ev[2], sid, ev[4],
-                                sigs[sid]))
-                n_imatch += 1
-        for r in list(open_runs):
-            close(r)
-
-        fused = sum(run_sizes)
-        meta = {
-            "entries": len(entries),
-            "segments": len(run_sizes),
-            "fused_events": fused,
-            "max_batch": max(run_sizes) if run_sizes else 0,
-            "mean_batch": round(fused / len(run_sizes), 2)
-            if run_sizes else 0.0,
-            "comp_entries": n_comp,
-            "block_entries": n_block,
-            "coll_entries": n_coll,
-            "p2p_entries": n_p2p,
-            "ipost_entries": n_ipost,
-            "imatch_entries": n_imatch,
-        }
-        return _WarmProgram(entries, prog.n_slots, max_sid, meta)
+    def _build_warm(self, prog: EventProgram) -> WarmProgram:
+        return build_warm(prog, self.world.interner.sigs)
 
     def warm_meta(self, program_factory) -> dict:
         """Segmentation statistics of the compiled warm program for
@@ -838,18 +544,59 @@ class Runtime:
             self._run_events(prog, sampler)
         return RunResult.from_report(critter.report())
 
-    def _get_program(self, program_factory) -> _EventProgram:
+    def _get_program(self, program_factory) -> EventProgram:
+        # fingerprint-keyed path: factories stamped with a structural
+        # fingerprint (``program_key``) share programs across equal
+        # geometries in-process and, when a ProgramCache is configured,
+        # across Runtimes / processes / runs
+        key = getattr(program_factory, "program_key", None)
+        if key is not None:
+            prog = self._keyed.get(key)
+            if prog is not None:
+                return prog
+            cache = self.program_cache
+            if cache is not None:
+                prog = cache.get(key, self.world)
+                if prog is not None:
+                    self.cache_hits += 1
+                    self._keyed[key] = prog
+                    return prog
+                self.cache_misses += 1
+            prog = self._record_keyed(key, program_factory)
+            self._keyed[key] = prog
+            return prog
         try:
             prog = self._traces.get(program_factory)
         except TypeError:            # unhashable/unweakrefable factory
             prog = None
         if prog is None:
-            prog = self._compile_events(self._record(program_factory))
+            prog = compile_events(self._record(program_factory))
             try:
                 self._traces[program_factory] = prog
             except TypeError:
                 pass
         return prog
+
+    def _record_keyed(self, key: str, program_factory) -> EventProgram:
+        """Record + compile under a structural fingerprint, publishing to
+        the configured ProgramCache.  The World's communicator-creation
+        delta is captured around the recording pass and stored with the
+        artifact so a loading World replays the same creations in the same
+        order (channel-registry aggregates are order-sensitive — see
+        .program's bit-identity contract)."""
+        n_comms = len(self.world._comms)
+        prog = compile_events(self._record(program_factory))
+        if self.program_cache is not None:
+            new_comms = list(self.world._comms)[n_comms:]
+            self.program_cache.put(key, prog, self.world, comms=new_comms)
+        return prog
+
+    def adopt_program(self, key: str, prog: EventProgram) -> None:
+        """Inject a pre-recorded program under a structural fingerprint:
+        subsequent runs of factories stamped with ``program_key == key``
+        skip ``_record`` entirely.  The program must have been materialized
+        into (or recorded in) THIS Runtime's World — sids are World-local."""
+        self._keyed[key] = prog
 
     def _run_live(self, program_factory, sampler) -> None:
         """The seed engine's interleaved pass (``trace_cache=False``):

@@ -40,6 +40,9 @@ def _strip(result) -> dict:
     d = result.to_json()
     d.pop("wall_s", None)
     d.get("extra", {}).pop("recovery", None)
+    # remote workers default to a program cache; the serial reference does
+    # not — replay is bit-identical, only the provenance counters differ
+    d.get("extra", {}).pop("program_cache", None)
     return d
 
 

@@ -62,6 +62,10 @@ def _strip(result) -> dict:
     d.pop("wall_s", None)
     # recovery provenance is infrastructure history, not measurement
     d.get("extra", {}).pop("recovery", None)
+    # program-cache counters are worker-configuration provenance (a remote
+    # worker defaults to a warm cache, the serial driver runs without one);
+    # replay is bit-identical, so measurements must still compare equal
+    d.get("extra", {}).pop("program_cache", None)
     return d
 
 
